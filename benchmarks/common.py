@@ -1,0 +1,73 @@
+"""Shared helpers for the paper-reproduction benchmarks.
+
+All benchmarks run CPU-scaled versions of the paper's experiments: node
+capacities and workload volume shrink together (same saturation regime,
+Table 3 size *distributions* preserved), so every comparison the paper
+makes is reproduced structurally. Deterministic seeds everywhere.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+from repro.core import SCHEDULER_NAMES, make_scheduler
+from repro.storage import SimConfig, make_node_set, make_trace, run_simulation
+
+RESULTS = pathlib.Path("results/benchmarks")
+
+ALGOS = [n for n in SCHEDULER_NAMES if n != "random_spread"]
+DREX = ["drex_sc", "drex_lb"]
+GREEDY = ["greedy_min_storage", "greedy_least_used"]
+SOTA = ["ec(3,2)", "ec(4,2)", "ec(6,3)", "daos"]
+
+CAP_SCALE = 0.001  # 5-20 TB drives -> 5-20 GB (same ratios)
+
+
+def sim(node_set: str, dataset: str, algo: str, *, fill=0.95, reliability="random_nines",
+        seed=0, failure_schedule=(), n_items=None, duration_days=None):
+    nodes = make_node_set(node_set, capacity_scale=CAP_SCALE)
+    cap = sum(n.capacity_mb for n in nodes)
+    items = make_trace(
+        dataset,
+        seed=seed,
+        total_mb=None if n_items else cap * fill,
+        n_items=n_items,
+        reliability=reliability,
+        duration_days=duration_days,
+    )
+    cfg = SimConfig(failure_schedule=tuple(failure_schedule), seed=seed)
+    t0 = time.perf_counter()
+    res = run_simulation(nodes, make_scheduler(algo), items, cfg)
+    wall = time.perf_counter() - t0
+    return res, wall, items
+
+
+def matched_throughput(res_by_algo: dict, base: str, other: str) -> float:
+    """Fig. 8/11 metric: throughput over the SAME item set — compare on
+    the intersection truncated to the smaller stored volume."""
+    a = res_by_algo[base]
+    b = res_by_algo[other]
+    ids_a = {s.item.item_id for s in a.stored_items}
+    ids_b = {s.item.item_id for s in b.stored_items}
+    common = ids_a & ids_b
+    if not common:
+        return 0.0
+
+    def thr(res):
+        items = [s for s in res.stored_items if s.item.item_id in common]
+        w = sum(s.item.size_mb for s in items)
+        t = sum(s.io_time for s in items)
+        return w / t if t > 0 else 0.0
+
+    return thr(a) - thr(b)
+
+
+def emit(name: str, payload: dict) -> None:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(json.dumps(payload, indent=2))
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

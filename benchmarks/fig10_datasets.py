@@ -1,0 +1,24 @@
+"""Fig. 10: proportion stored for Sentinel-2, SWIM, IBM COS
+(Most Used nodes, random nines, saturating)."""
+
+from .common import ALGOS, SOTA, csv_row, emit, sim
+
+DATASETS = ("sentinel2", "swim", "ibm_cos")
+
+
+def run() -> list[str]:
+    out = {}
+    for ds in DATASETS:
+        out[ds] = {}
+        for algo in ALGOS:
+            res, _, _ = sim("most_used", ds, algo)
+            out[ds][algo] = res.stored_fraction
+    emit("fig10", out)
+    lines = []
+    for ds in DATASETS:
+        sc, lb, glu = (out[ds][a] for a in ("drex_sc", "drex_lb", "greedy_least_used"))
+        avg_sota = sum(out[ds][a] for a in SOTA) / len(SOTA)
+        lines.append(csv_row(
+            f"fig10_{ds}", 0.0,
+            f"sc_gain={sc/avg_sota-1:+.1%};lb_gain={lb/avg_sota-1:+.1%};glu_gain={glu/avg_sota-1:+.1%}"))
+    return lines

@@ -1,0 +1,23 @@
+"""Fig. 11: matched-volume throughput difference across datasets."""
+
+from .common import ALGOS, DREX, csv_row, emit, matched_throughput, sim
+
+DATASETS = ("sentinel2", "swim", "ibm_cos")
+
+
+def run() -> list[str]:
+    out = {}
+    lines = []
+    for ds in DATASETS:
+        res = {}
+        for algo in ALGOS:
+            res[algo], _, _ = sim("most_used", ds, algo)
+        out[ds] = {}
+        for base in DREX:
+            out[ds][base] = {
+                o: matched_throughput(res, base, o) for o in ALGOS if o != base
+            }
+        worst = min(out[ds]["drex_sc"].values())
+        lines.append(csv_row(f"fig11_{ds}", 0.0, f"drex_sc_worst_delta_mbps={worst:+.2f}"))
+    emit("fig11", out)
+    return lines

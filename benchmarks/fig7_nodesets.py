@@ -1,0 +1,22 @@
+"""Fig. 7: proportion stored across the four node sets (random nines)."""
+
+from .common import ALGOS, SOTA, csv_row, emit, sim
+
+SETS = ("most_used", "most_unreliable", "most_reliable", "homogeneous")
+
+
+def run() -> list[str]:
+    out = {}
+    for ns in SETS:
+        out[ns] = {}
+        for algo in ALGOS:
+            res, _, _ = sim(ns, "meva", algo)
+            out[ns][algo] = res.stored_fraction
+    emit("fig7", out)
+    lines = []
+    for ns in SETS:
+        sc = out[ns]["drex_sc"]
+        avg_sota = sum(out[ns][a] for a in SOTA) / len(SOTA)
+        lines.append(csv_row(f"fig7_{ns}", 0.0,
+                             f"drex_sc={sc:.3f};avg_sota={avg_sota:.3f};gain={sc/avg_sota-1:+.1%}"))
+    return lines

@@ -1,0 +1,26 @@
+"""Fig. 8: matched-volume throughput difference of D-Rex SC/LB vs every
+other algorithm, per node set (random nines, MEVA)."""
+
+from .common import ALGOS, DREX, csv_row, emit, matched_throughput, sim
+
+SETS = ("most_used", "most_unreliable", "most_reliable", "homogeneous")
+
+
+def run() -> list[str]:
+    out = {}
+    lines = []
+    for ns in SETS:
+        res = {}
+        for algo in ALGOS:
+            res[algo], _, _ = sim(ns, "meva", algo)
+        out[ns] = {}
+        for base in DREX:
+            out[ns][base] = {
+                other: matched_throughput(res, base, other)
+                for other in ALGOS
+                if other != base
+            }
+        worst = min(out[ns]["drex_sc"].values())
+        lines.append(csv_row(f"fig8_{ns}", 0.0, f"drex_sc_worst_delta_mbps={worst:+.2f}"))
+    emit("fig8", out)
+    return lines

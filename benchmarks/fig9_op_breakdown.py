@@ -1,0 +1,21 @@
+"""Fig. 9: time per operation class on a non-saturating subset
+(every algorithm stores everything -> fair breakdown comparison)."""
+
+from .common import ALGOS, csv_row, emit, sim
+
+
+def run() -> list[str]:
+    out = {}
+    for algo in ALGOS:
+        res, _, _ = sim("most_used", "meva", algo, reliability=0.9999, n_items=400)
+        assert res.n_failed_writes == 0 or res.stored_fraction > 0.99, algo
+        out[algo] = res.time_breakdown
+    emit("fig9", out)
+    lines = []
+    for algo in ("drex_sc", "greedy_min_storage", "ec(3,2)"):
+        t = out[algo]
+        coding = t["encode"] + t["decode"]
+        io = t["read"] + t["write"]
+        lines.append(csv_row(f"fig9_{algo}", 0.0,
+                             f"coding_s={coding:.1f};io_s={io:.1f};coding_share={coding/(coding+io):.2f}"))
+    return lines

@@ -1,0 +1,88 @@
+"""Roofline table (re)generation from stored dry-run artifacts.
+
+Re-analyzes the zstd-compressed per-cell HLO dumps (results/hlo/) with
+the current analyzer — no recompilation — merges with the dry-run JSON
+records (results/dryrun/), rewrites the roofline fields, and prints the
+EXPERIMENTS.md §Roofline table.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--results results]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import zstandard
+
+from repro.configs import SHAPES, get_config
+from repro.roofline import RooflineTerms, analyze_hlo, model_flops_for
+
+
+def reanalyze(results: pathlib.Path) -> list[dict]:
+    out = []
+    for jf in sorted((results / "dryrun").glob("*.json")):
+        rec = json.loads(jf.read_text())
+        if rec.get("status") != "ok":
+            out.append(rec)
+            continue
+        hf = results / "hlo" / (jf.stem + ".hlo.zst")
+        if hf.exists():
+            text = zstandard.ZstdDecompressor().decompress(hf.read_bytes()).decode()
+            hlo = analyze_hlo(text)
+            cfg = get_config(rec["arch"])
+            spec = SHAPES[rec["shape"]]
+            terms = RooflineTerms(
+                arch=rec["arch"],
+                shape=rec["shape"],
+                mesh=rec["mesh"],
+                chips=rec["chips"],
+                global_flops=rec["jaxpr_flops"]["dot"] + rec["jaxpr_flops"]["elementwise"],
+                per_device_hbm_bytes=hlo.memory_bytes_ideal,
+                per_device_collective_bytes=hlo.total_collective_bytes,
+                collective_breakdown={k: v for k, v in hlo.collective_bytes.items() if v},
+                model_flops=model_flops_for(cfg, spec.kind, spec.seq_len, spec.global_batch),
+                hlo_dot_flops_per_device=hlo.dot_flops,
+                per_device_hbm_bytes_raw=hlo.memory_bytes,
+            )
+            rec["roofline"] = terms.to_dict()
+            rec["n_collective_ops"] = hlo.n_collectives
+            jf.write_text(json.dumps(rec, indent=2))
+        out.append(rec)
+    return out
+
+
+def print_table(recs: list[dict], mesh: str = "single") -> None:
+    print(
+        f"{'arch':20s} {'shape':12s} {'comp s':>8s} {'mem s':>8s} {'mem_raw':>8s} "
+        f"{'coll s':>8s} {'bneck':6s} {'useful':>6s} {'roofl%':>7s}"
+    )
+    for rec in recs:
+        if rec.get("mesh") != mesh:
+            continue
+        if rec.get("status") == "skipped":
+            print(f"{rec['arch']:20s} {rec['shape']:12s} {'— skipped (full attention @500k): see DESIGN.md §5':>50s}")
+            continue
+        if rec.get("status") != "ok":
+            print(f"{rec['arch']:20s} {rec['shape']:12s} ERROR")
+            continue
+        t = rec["roofline"]
+        print(
+            f"{rec['arch']:20s} {rec['shape']:12s} {t['compute_s']:8.2f} {t['memory_s']:8.2f} "
+            f"{t.get('memory_s_raw', 0):8.2f} {t['collective_s']:8.2f} {t['bottleneck'][:6]:6s} "
+            f"{t['useful_flops_ratio']:6.2f} {100*t['roofline_fraction']:7.2f}"
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    args = ap.parse_args()
+    recs = reanalyze(pathlib.Path(args.results))
+    print_table(recs, args.mesh)
+
+
+if __name__ == "__main__":
+    main()

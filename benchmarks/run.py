@@ -1,0 +1,67 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract, and
+writes per-figure JSON into results/benchmarks/ for EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig5,fig12]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (
+    fig1_encode_breakdown,
+    fig5_reliability_sweep,
+    fig6_saturation,
+    fig7_nodesets,
+    fig8_throughput,
+    fig9_op_breakdown,
+    fig10_datasets,
+    fig11_throughput_datasets,
+    fig12_failures,
+    fig13_e2e_checkpoint,
+    table2_overhead,
+)
+
+BENCHES = {
+    "fig1": fig1_encode_breakdown.run,
+    "table2": table2_overhead.run,
+    "fig5": fig5_reliability_sweep.run,
+    "fig6": fig6_saturation.run,
+    "fig7": fig7_nodesets.run,
+    "fig8": fig8_throughput.run,
+    "fig9": fig9_op_breakdown.run,
+    "fig10": fig10_datasets.run,
+    "fig11": fig11_throughput_datasets.run,
+    "fig12": fig12_failures.run,
+    "fig13": fig13_e2e_checkpoint.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated subset")
+    args = ap.parse_args()
+    names = list(BENCHES) if not args.only else args.only.split(",")
+    print("name,us_per_call,derived")
+    failures = []
+    for name in names:
+        t0 = time.perf_counter()
+        try:
+            for line in BENCHES[name]():
+                print(line, flush=True)
+        except Exception as e:  # keep the harness running, report at exit
+            failures.append((name, repr(e)))
+            print(f"{name},0.0,ERROR:{type(e).__name__}", flush=True)
+        print(f"{name}_wall,{(time.perf_counter()-t0)*1e6:.0f},", flush=True)
+    if failures:
+        for n, e in failures:
+            print(f"[bench] FAILED {n}: {e}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Table 2: scheduling overhead per data item vs number of nodes."""
+
+import time
+
+import numpy as np
+
+from repro.core import ClusterView, DataItem, StorageNode, make_scheduler
+from .common import csv_row, emit
+
+
+def _cluster(n: int) -> ClusterView:
+    rng = np.random.default_rng(n)
+    nodes = [
+        StorageNode(
+            node_id=i,
+            capacity_mb=float(rng.uniform(5e6, 2e7)),
+            write_bw=float(rng.uniform(100, 250)),
+            read_bw=float(rng.uniform(100, 400)),
+            annual_failure_rate=float(rng.uniform(0.003, 0.05)),
+        )
+        for i in range(n)
+    ]
+    return ClusterView.from_nodes(nodes)
+
+
+def run(sizes=(10, 50, 100, 500), reps: int = 3) -> list[str]:
+    lines = []
+    table = {}
+    for algo in ("greedy_min_storage", "greedy_least_used", "drex_lb", "drex_sc"):
+        table[algo] = {}
+        for n in sizes:
+            cluster = _cluster(n)
+            sched = make_scheduler(algo)
+            item = DataItem(0, 117.0, 0.0, 365.0, 0.999)
+            sched.place(item, cluster)  # warm
+            r = 1 if n >= 500 else reps
+            t0 = time.perf_counter()
+            for _ in range(r):
+                sched.place(item, cluster)
+            per_item_ms = (time.perf_counter() - t0) / r * 1e3
+            table[algo][n] = per_item_ms
+            lines.append(csv_row(f"table2_{algo}_n{n}", per_item_ms * 1e3, f"nodes={n}"))
+    emit("table2", table)
+    return lines

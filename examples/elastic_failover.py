@@ -1,0 +1,60 @@
+"""Fault-tolerance drill (deliverable (b), example 4): train, checkpoint
+via D-Rex EC, kill storage nodes mid-run, repair proactively, restart the
+trainer elastically on a different mesh, and keep training.
+
+    PYTHONPATH=src python examples/elastic_failover.py
+"""
+
+import sys
+
+import jax
+
+sys.path.insert(0, "src")
+
+from repro.checkpoint import CheckpointPolicy, DRexCheckpointer, StorageFabric
+from repro.configs import get_config
+from repro.data import DataConfig
+from repro.launch.mesh import make_local_mesh
+from repro.optim import AdamWConfig
+from repro.storage import make_node_set
+from repro.train import Trainer, TrainerConfig, init_train_state
+from repro.train.step import reshard_state
+
+
+def main() -> None:
+    cfg = get_config("qwen3-8b", smoke=True)
+    fabric = StorageFabric(make_node_set("most_unreliable", capacity_scale=1e-4))
+    ck = DRexCheckpointer(fabric, "drex_sc",
+                          CheckpointPolicy(item_mb=1.0, reliability_target=0.9999))
+    like = init_train_state(cfg, jax.random.PRNGKey(0))
+
+    class Adapter:
+        def save(self, st, step): ck.save(st, step)
+        def save_async(self, st, step): return ck.save_async(st, step)
+        def restore_latest(self, _): return ck.restore_latest(like)
+
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=4)
+    print("phase 1: train 30 steps with EC checkpoints every 10")
+    t1 = Trainer(cfg, AdamWConfig(lr=3e-3), TrainerConfig(steps=30, log_every=10, ckpt_every=10),
+                 data_cfg=dc, mesh=make_local_mesh(1, 1), checkpointer=Adapter())
+    t1.run()
+
+    print("\nphase 2: storage nodes 0 and 2 fail; checkpoint health:")
+    fabric.fail_node(0); fabric.fail_node(2)
+    rel = ck.group_reliability()
+    print(f"  min group reliability: {min(rel):.6f} (target 0.9999)")
+    n = ck.repair()
+    print(f"  proactive repair rebuilt {n} chunks; "
+          f"min reliability now {min(ck.group_reliability()):.6f}")
+
+    print("\nphase 3: elastic restart on a fresh mesh, resume to step 45")
+    t2 = Trainer(cfg, AdamWConfig(lr=3e-3), TrainerConfig(steps=45, log_every=5),
+                 data_cfg=dc, mesh=make_local_mesh(1, 1), checkpointer=Adapter())
+    state = t2.init_or_restore()
+    state = reshard_state(state, cfg, make_local_mesh(1, 1))
+    t2.run(state)
+    print("\nsurvived node failures + elastic restart; training continued.")
+
+
+if __name__ == "__main__":
+    main()

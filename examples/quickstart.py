@@ -1,0 +1,101 @@
+"""Quickstart: end-to-end training driver (deliverable (b), example 1).
+
+Trains a ~100M-parameter dense LM for a few hundred steps on synthetic
+data through the full production stack: config -> sharded train step ->
+AdamW(f32 master) -> D-Rex EC-protected checkpoints on a heterogeneous
+storage fabric -> kill/restore drill at the end.
+
+CPU-friendly by default (a reduced ~8M model, 200 steps); pass --full
+for the 100M-parameter configuration.
+
+    PYTHONPATH=src python examples/quickstart.py [--full] [--steps N]
+"""
+
+import argparse
+import sys
+
+import jax
+
+sys.path.insert(0, "src")
+
+from repro.checkpoint import CheckpointPolicy, DRexCheckpointer, StorageFabric
+from repro.data import DataConfig
+from repro.launch.mesh import make_local_mesh
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig
+from repro.storage import make_node_set
+from repro.train import Trainer, TrainerConfig, init_train_state
+
+
+def model_config(full: bool) -> ModelConfig:
+    if full:  # ~103M params
+        return ModelConfig(
+            name="quickstart-100m", family="dense", n_layers=12, d_model=768,
+            n_heads=12, n_kv_heads=4, d_ff=2048, vocab_size=32_000,
+            activation="silu",
+        )
+    return ModelConfig(  # ~8M params: same family, laptop-scale
+        name="quickstart-8m", family="dense", n_layers=4, d_model=256,
+        n_heads=8, n_kv_heads=4, d_ff=1024, vocab_size=4096,
+        activation="silu",
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    cfg = model_config(args.full)
+    print(f"model: {cfg.name} ({cfg.n_params()/1e6:.1f}M params), "
+          f"devices: {jax.device_count()}")
+
+    # D-Rex-protected checkpointing over the paper's Most Used node set.
+    fabric = StorageFabric(make_node_set("most_used", capacity_scale=1e-4))
+    ck = DRexCheckpointer(
+        fabric, "drex_sc",
+        # Five nines over a 1-year retention forces P>=2 on this node
+        # set (over 30 days these drives are reliable enough that D-Rex
+        # correctly buys only P=1); the drill below kills two nodes.
+        CheckpointPolicy(item_mb=8.0, reliability_target=0.99999,
+                         retention_days=365.0),
+    )
+    like = init_train_state(cfg, jax.random.PRNGKey(0))
+
+    class Adapter:
+        def save(self, st, step): ck.save(st, step)
+        def save_async(self, st, step): return ck.save_async(st, step)
+        def restore_latest(self, _): return ck.restore_latest(like)
+
+    ckpt_every = min(50, max(10, args.steps // 4))
+    trainer = Trainer(
+        cfg,
+        AdamWConfig(lr=3e-3, warmup_steps=20),
+        TrainerConfig(steps=args.steps, log_every=10, ckpt_every=ckpt_every),
+        data_cfg=DataConfig(vocab_size=cfg.vocab_size, seq_len=256, global_batch=8),
+        mesh=make_local_mesh(1, 1),
+        checkpointer=Adapter(),
+    )
+    state = trainer.run()
+
+    # Failure drill: lose two storage nodes, prove the checkpoint survives.
+    print("\nfailure drill: killing storage nodes 0 and 3 ...")
+    fabric.fail_node(0)
+    fabric.fail_node(3)
+    restored, step = ck.restore_latest(like)
+    import numpy as np
+    ok = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored))
+        if a is not None
+    )
+    print(f"restored checkpoint from step {step} after 2/10 node failures: "
+          f"bit-exact={ok}")
+    print(f"checkpoint storage overhead: "
+          f"{ck.stats['bytes_stored']/max(ck.stats['bytes_raw'],1):.2f}x "
+          f"(vs 3.0x for HDFS-style replication)")
+
+
+if __name__ == "__main__":
+    main()

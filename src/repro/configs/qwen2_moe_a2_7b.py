@@ -1,0 +1,43 @@
+"""qwen2-moe-a2.7b [moe]: 24L d_model=2048 16H (GQA kv=16) d_ff=1408
+vocab=151936, MoE 60e top-4 + 4 shared experts.
+[hf:Qwen/Qwen1.5-MoE-A2.7B]"""
+
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,              # per-expert ffn dim (shared expert = 4x this)
+    vocab_size=151_936,
+    activation="silu",
+    moe=MoEConfig(
+        n_experts=60,
+        experts_per_token=4,
+        expert_d_ff=1408,
+        n_shared_experts=4,
+        norm_topk=False,
+        # 60 does not divide the 16-way model axis; pad to 64 so expert
+        # parallelism shards evenly (beyond-paper §Perf optimization).
+        pad_experts_to=64,
+    ),
+    # explicit shard_map dispatch (§Perf: collective -95%, memory -92%)
+    moe_dispatch="shard_map",
+)
+
+SMOKE = CONFIG.with_(
+    name="qwen2-moe-smoke",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=96,
+    vocab_size=256,
+    moe=MoEConfig(
+        n_experts=8, experts_per_token=2, expert_d_ff=96, n_shared_experts=2,
+        norm_topk=False,
+    ),
+)

@@ -1,0 +1,57 @@
+"""D-Rex core: reliability model (§3.1) + placement algorithms (§4, §5.2)."""
+
+from .reliability import (
+    batch_pr_avail_exact,
+    meets_target,
+    min_parity_for_target,
+    poisson_binomial_cdf,
+    pr_avail,
+    pr_failure,
+)
+from .types import (
+    ClusterView,
+    DataItem,
+    Decision,
+    ECTimeModel,
+    Placement,
+    StorageNode,
+)
+from .algorithms import (
+    DAOSAdaptive,
+    DRexLB,
+    DRexSC,
+    GreedyLeastUsed,
+    GreedyMinStorage,
+    RandomSpread,
+    SCHEDULER_NAMES,
+    Scheduler,
+    StaticEC,
+    make_scheduler,
+    saturation_score,
+)
+
+__all__ = [
+    "pr_failure",
+    "pr_avail",
+    "poisson_binomial_cdf",
+    "meets_target",
+    "min_parity_for_target",
+    "batch_pr_avail_exact",
+    "StorageNode",
+    "DataItem",
+    "Placement",
+    "ClusterView",
+    "ECTimeModel",
+    "Decision",
+    "Scheduler",
+    "GreedyMinStorage",
+    "GreedyLeastUsed",
+    "DRexLB",
+    "DRexSC",
+    "StaticEC",
+    "DAOSAdaptive",
+    "RandomSpread",
+    "make_scheduler",
+    "saturation_score",
+    "SCHEDULER_NAMES",
+]

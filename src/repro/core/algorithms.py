@@ -1,0 +1,553 @@
+"""The four D-Rex schedulers (paper §4) and the SOTA baselines (§5.2).
+
+Every scheduler answers, for one item ``d`` arriving online, the question
+of Problem 1: choose ``(K_d, P_d, M_d)`` subject to the reliability
+constraint (Eq. 3) and per-node capacity, optimizing storage and I/O.
+
+All schedulers see the cluster through :class:`repro.core.types.ClusterView`
+and are purely functional over it (the caller commits the placement).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .reliability import min_parity_for_target
+from .types import ClusterView, DataItem, Decision, ECTimeModel, Placement
+
+__all__ = [
+    "Scheduler",
+    "GreedyMinStorage",
+    "GreedyLeastUsed",
+    "DRexLB",
+    "DRexSC",
+    "StaticEC",
+    "DAOSAdaptive",
+    "RandomSpread",
+    "make_scheduler",
+    "SCHEDULER_NAMES",
+]
+
+
+class Scheduler:
+    """Base interface. ``place`` must not mutate ``cluster``."""
+
+    name: str = "base"
+    #: smallest item size seen so far (MB); simulator keeps this fresh.
+    smin_mb: float = 1.0
+
+    def place(self, item: DataItem, cluster: ClusterView) -> Decision:
+        raise NotImplementedError
+
+    def observe_item(self, item: DataItem) -> None:
+        """Track the smallest item size (used by the SC saturation curve)."""
+        if item.size_mb > 0:
+            self.smin_mb = min(self.smin_mb, item.size_mb)
+
+    # -- shared helpers -----------------------------------------------------
+
+    @staticmethod
+    def _live_sorted(cluster: ClusterView, key: np.ndarray, descending=True):
+        """Live node ids sorted by ``key`` (stable, deterministic)."""
+        ids = cluster.live_ids()
+        order = np.argsort(-key[ids] if descending else key[ids], kind="stable")
+        return ids[order]
+
+    @staticmethod
+    def _fits(cluster: ClusterView, node_ids, chunk_mb: float) -> bool:
+        free = cluster.free_mb[np.asarray(node_ids)]
+        return bool(np.all(free >= chunk_mb))
+
+
+# ---------------------------------------------------------------------------
+# §4.1 GreedyMinStorage
+# ---------------------------------------------------------------------------
+
+
+class GreedyMinStorage(Scheduler):
+    """Minimize per-item storage footprint ``(size/K) * N`` s.t. reliability
+    (Eq. 4); mapping favors the fastest (write-bandwidth) nodes *among
+    those with room for the chunk* — once the fast nodes saturate the
+    selection slides to slower ones instead of failing (the paper's §5.4
+    observation that GreedyMinStorage keeps utilizing all nodes)."""
+
+    name = "greedy_min_storage"
+
+    def place(self, item: DataItem, cluster: ClusterView) -> Decision:
+        self.observe_item(item)
+        by_bw = self._live_sorted(cluster, cluster.write_bw)
+        L = len(by_bw)
+        if L < 2:
+            return Decision(None, 0, "fewer than 2 live nodes")
+        fail_all = cluster.fail_probs(item.delta_t_days)
+        free = cluster.free_mb
+
+        best: Optional[Placement] = None
+        best_cost = math.inf
+        considered = 0
+        for n in range(2, L + 1):
+            considered += 1
+            # Fixed point over K: the chunk size determines which nodes
+            # qualify (free >= chunk), which determines the mapping, which
+            # determines the min parity, which determines K. K only ever
+            # decreases, so this terminates in <= N steps (typically 1-2).
+            k = n - 1
+            placement = None
+            while k >= 1:
+                chunk = item.size_mb / k
+                fitting = by_bw[free[by_bw] >= chunk]
+                if len(fitting) < n:
+                    break
+                mapping = fitting[:n]
+                mp = min_parity_for_target(
+                    fail_all[mapping], item.reliability_target
+                )
+                if mp is None:
+                    break
+                p_star = max(1, mp)  # the repository always keeps parity
+                k_new = n - p_star
+                if k_new < 1:
+                    break
+                if k_new >= k:
+                    placement = Placement(
+                        k=k, p=n - k, node_ids=tuple(int(x) for x in mapping)
+                    )
+                    break
+                k = k_new
+            if placement is None:
+                continue
+            cost = (item.size_mb / placement.k) * n
+            if cost < best_cost:
+                best_cost = cost
+                best = placement
+        if best is None:
+            return Decision(None, considered, "no (N,K) satisfies reliability+capacity")
+        return Decision(best, considered, "")
+
+
+# ---------------------------------------------------------------------------
+# §4.2 GreedyLeastUsed
+# ---------------------------------------------------------------------------
+
+
+class GreedyLeastUsed(Scheduler):
+    """Minimize ``K+P`` s.t. reliability (Eq. 5); nodes with the highest
+    free space get the chunks (then minimal parity among feasible).
+    ``K >= 2`` as in Alg. 1 — the paper's erasure-coding schedulers do not
+    degenerate to replication (only DAOS's explicit replication configs do).
+    """
+
+    name = "greedy_least_used"
+
+    def place(self, item: DataItem, cluster: ClusterView) -> Decision:
+        self.observe_item(item)
+        by_free = self._live_sorted(cluster, cluster.free_mb)
+        L = len(by_free)
+        if L < 2:
+            return Decision(None, 0, "fewer than 2 live nodes")
+        fail_all = cluster.fail_probs(item.delta_t_days)
+
+        considered = 0
+        dp = np.zeros(L + 1, dtype=np.float64)
+        dp[0] = 1.0
+        for n_idx in range(L):
+            pi = fail_all[by_free[n_idx]]
+            dp[1 : n_idx + 2] = dp[1 : n_idx + 2] * (1.0 - pi) + dp[: n_idx + 1] * pi
+            dp[0] *= 1.0 - pi
+            n = n_idx + 1
+            if n < 2:
+                continue
+            considered += 1
+            cdf = np.cumsum(dp[: n + 1])
+            feas = np.nonzero(cdf[:n] >= item.reliability_target)[0]
+            if feas.size == 0:
+                continue
+            p_star = max(1, int(feas[0]))  # the repository always keeps parity
+            k = n - p_star
+            if k < 2:
+                continue
+            chunk = item.size_mb / k
+            mapping = by_free[:n]
+            if not self._fits(cluster, mapping, chunk):
+                continue
+            return Decision(
+                Placement(k=k, p=p_star, node_ids=tuple(int(x) for x in mapping)),
+                considered,
+                "",
+            )
+        return Decision(None, considered, "no N satisfies reliability+capacity")
+
+
+# ---------------------------------------------------------------------------
+# §4.3 D-Rex LB (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+class DRexLB(Scheduler):
+    """Balance-penalty minimization; smallest feasible parity (Alg. 1)."""
+
+    name = "drex_lb"
+
+    def place(self, item: DataItem, cluster: ClusterView) -> Decision:
+        self.observe_item(item)
+        by_free = self._live_sorted(cluster, cluster.free_mb)
+        L = len(by_free)
+        if L < 3:  # Alg. 1 needs K>=2 and P>=1
+            return Decision(None, 0, "fewer than 3 live nodes")
+        fail_all = cluster.fail_probs(item.delta_t_days)
+        free = cluster.free_mb
+        f_avg = float(free[by_free].mean())  # line 1
+        # |F(S_j) - F_avg| for every node once; penalties for out-of-mapping
+        # nodes are suffix sums over the sorted order (mapping is a prefix).
+        dev = np.abs(free[by_free] - f_avg)
+        suffix = np.concatenate([np.cumsum(dev[::-1])[::-1], [0.0]])
+
+        considered = 0
+        for p in range(1, L):  # line 5
+            min_bp = math.inf
+            min_k = -1
+            # Incremental DP over the prefix (mapping = first K+P nodes).
+            dp = np.zeros(L + 1, dtype=np.float64)
+            dp[0] = 1.0
+            # preload first (2 + p - 1) nodes minus one; we advance as K grows
+            n_loaded = 0
+            for k in range(2, L - p + 1):  # line 6
+                n = k + p
+                while n_loaded < n:
+                    pi = fail_all[by_free[n_loaded]]
+                    dp[1 : n_loaded + 2] = (
+                        dp[1 : n_loaded + 2] * (1.0 - pi) + dp[: n_loaded + 1] * pi
+                    )
+                    dp[0] *= 1.0 - pi
+                    n_loaded += 1
+                considered += 1
+                avail = float(np.minimum(np.cumsum(dp[: n + 1]), 1.0)[p])
+                if avail < item.reliability_target:
+                    continue
+                chunk = item.size_mb / k
+                mapping = by_free[:n]
+                if not self._fits(cluster, mapping, chunk):
+                    continue
+                # lines 10-15: balance penalty
+                bp = float(np.abs(free[mapping] - chunk - f_avg).sum()) + float(
+                    suffix[n]
+                )
+                if bp < min_bp:
+                    min_bp = bp
+                    min_k = k
+            if min_k != -1:  # line 22: stop at the smallest feasible P
+                n = min_k + p
+                return Decision(
+                    Placement(
+                        k=min_k, p=p, node_ids=tuple(int(x) for x in by_free[:n])
+                    ),
+                    considered,
+                    "",
+                )
+        return Decision(None, considered, "no (K,P) satisfies reliability+capacity")
+
+
+# ---------------------------------------------------------------------------
+# §4.4 D-Rex SC (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+
+def saturation_score(projected_used_mb, capacity_mb, smin_mb, n_nodes: int = 10):
+    """Exponential saturation score (paper Fig. 3 / Alg. 2 line 11).
+
+    The curve is the exponential through the two anchors the paper's
+    formula names: ``(smallest known data item size, 1/L)`` and
+    ``(total storage capacity, 1)``, evaluated at the projected *used*
+    bytes ``x``:
+
+        f(x) = (1/L) * exp( ln(L) * (x - s_min) / (cap - s_min) )
+
+    i.e. an empty node scores ~1/L and a full node scores 1, rising
+    exponentially as the node approaches its limit ("penalize nodes
+    approaching their limit", §4.4). Elementwise on numpy arrays; clipped
+    to [0, 1].
+    """
+    cap = np.asarray(capacity_mb, dtype=np.float64)
+    x = np.asarray(projected_used_mb, dtype=np.float64)
+    span = np.maximum(cap - smin_mb, 1e-9)
+    u = np.clip((x - smin_mb) / span, 0.0, 1.0)
+    inv_l = 1.0 / max(2, n_nodes)
+    return np.clip(inv_l * np.exp(math.log(max(2, n_nodes)) * u), 0.0, 1.0)
+
+
+@dataclasses.dataclass
+class _Candidate:
+    k: int
+    p: int
+    node_ids: tuple
+    duration: float
+    storage: float
+    saturation: float
+
+
+class DRexSC(Scheduler):
+    """System-capacity-aware scheduler (Alg. 2): Pareto front over
+    {duration, storage, saturation} with saturation-weighted scoring."""
+
+    name = "drex_sc"
+    MAX_MAPPINGS = 2**10
+
+    def __init__(self, time_model: ECTimeModel | None = None):
+        self.time_model = time_model or ECTimeModel()
+
+    def place(self, item: DataItem, cluster: ClusterView) -> Decision:
+        self.observe_item(item)
+        by_free = self._live_sorted(cluster, cluster.free_mb)  # line 1
+        L = len(by_free)
+        if L < 2:
+            return Decision(None, 0, "fewer than 2 live nodes")
+        fail_all = cluster.fail_probs(item.delta_t_days)
+        free = cluster.free_mb
+        cap = cluster.capacity_mb
+        used = cluster.used_mb
+        smin = self.smin_mb
+        live = cluster.live_ids()
+        # Saturation baseline over every live node; candidates add only the
+        # delta of their mapped nodes (+chunk), so — like D-Rex LB's
+        # balance penalty — unmapped nodes still participate and wide,
+        # shallow placements are rewarded for not pushing any node toward
+        # its limit.
+        f_base = saturation_score(used[live], cap[live], smin, L)
+        f_base_sum = float(f_base.sum())
+
+        candidates: list[_Candidate] = []
+        considered = 0
+        # line 2: first 2^10 contiguous windows of the sorted order, windows
+        # expanding from each start: [0:2],[0:3],...,[0:L],[1:3],...
+        n_windows = 0
+        for s in range(L - 1):
+            if n_windows >= self.MAX_MAPPINGS:
+                break
+            dp = np.zeros(L + 1, dtype=np.float64)
+            dp[0] = 1.0
+            n_loaded = 0
+            for e in range(s + 2, L + 1):
+                if n_windows >= self.MAX_MAPPINGS:
+                    break
+                n_windows += 1
+                while n_loaded < e - s:
+                    pi = fail_all[by_free[s + n_loaded]]
+                    dp[1 : n_loaded + 2] = (
+                        dp[1 : n_loaded + 2] * (1.0 - pi) + dp[: n_loaded + 1] * pi
+                    )
+                    dp[0] *= 1.0 - pi
+                    n_loaded += 1
+                n = e - s
+                considered += 1
+                cdf = np.minimum(np.cumsum(dp[: n + 1]), 1.0)
+                feas = np.nonzero(cdf[:n] >= item.reliability_target)[0]
+                if feas.size == 0:
+                    continue
+                p_star = max(1, int(feas[0]))  # line 4: min storage == max K
+                k = n - p_star
+                if k < 1:
+                    continue
+                chunk = item.size_mb / k
+                mapping = by_free[s:e]
+                if not self._fits(cluster, mapping, chunk):
+                    continue
+                tm = self.time_model
+                duration = (
+                    chunk / float(cluster.write_bw[mapping].min())
+                    + chunk / float(cluster.read_bw[mapping].min())
+                    + tm.t_encode(n, k, item.size_mb)
+                    + tm.t_decode(k, item.size_mb)
+                )  # line 6
+                storage = chunk * n  # line 7
+                sat = f_base_sum + float(
+                    (
+                        saturation_score(used[mapping] + chunk, cap[mapping], smin, L)
+                        - saturation_score(used[mapping], cap[mapping], smin, L)
+                    ).sum()
+                )  # line 8
+                candidates.append(
+                    _Candidate(k, p_star, tuple(int(x) for x in mapping), duration, storage, sat)
+                )
+        if not candidates:
+            return Decision(None, considered, "no mapping satisfies reliability+capacity")
+
+        # line 11: system saturation over the whole repository.
+        sys_sat = float(
+            saturation_score(
+                np.array([used[live].sum()]), np.array([cap[live].sum()]), smin, L
+            )[0]
+        )
+
+        front = _pareto_front(candidates)
+        d = np.array([c.duration for c in front])
+        st = np.array([c.storage for c in front])
+        sa = np.array([c.saturation for c in front])
+        dur_prog = _progress(d)
+        sto_prog = _progress(st)
+        sat_prog = _progress(sa)
+        score = (1.0 - sys_sat) * dur_prog + (sto_prog + sat_prog) / 2.0  # line 17
+        best = front[int(np.argmax(score))]
+        return Decision(
+            Placement(k=best.k, p=best.p, node_ids=best.node_ids), considered, ""
+        )
+
+
+def _progress(vals: np.ndarray) -> np.ndarray:
+    """Relative progress (line 16): 1 at the min, 0 at the max; all-equal
+    candidates make no progress relative to each other."""
+    lo, hi = float(vals.min()), float(vals.max())
+    if hi - lo <= 1e-12:
+        return np.zeros_like(vals)
+    return (hi - vals) / (hi - lo)
+
+
+def _pareto_front(cands: Sequence[_Candidate]) -> list[_Candidate]:
+    """Minimizing front over (duration, storage, saturation); O(n^2) with
+    n <= 1024 candidate mappings."""
+    arr = np.array([[c.duration, c.storage, c.saturation] for c in cands])
+    n = arr.shape[0]
+    keep = np.ones(n, dtype=bool)
+    for i in range(n):
+        # i is dominated iff some j is <= on every objective and < on one.
+        dominates_i = np.all(arr <= arr[i], axis=1) & np.any(arr < arr[i], axis=1)
+        if np.any(dominates_i):
+            keep[i] = False
+    front = [c for c, k in zip(cands, keep) if k]
+    return front if front else list(cands)
+
+
+# ---------------------------------------------------------------------------
+# §5.2.1 Static erasure coding (HDFS EC(3,2)/EC(6,3), Gluster EC(4,2))
+# ---------------------------------------------------------------------------
+
+
+class StaticEC(Scheduler):
+    """Algorithm 3: fixed (K, P); first K+P fitting nodes by write BW."""
+
+    def __init__(self, k: int, p: int):
+        self.k = k
+        self.p = p
+        self.name = f"ec({k},{p})"
+
+    def place(self, item: DataItem, cluster: ClusterView) -> Decision:
+        self.observe_item(item)
+        by_bw = self._live_sorted(cluster, cluster.write_bw)  # line 2
+        n = self.k + self.p
+        chunk = item.size_mb / self.k
+        fitting = [int(i) for i in by_bw if cluster.free_mb[i] >= chunk]
+        if len(fitting) < n:
+            return Decision(None, 1, "not enough nodes with capacity")
+        mapping = tuple(fitting[:n])
+        fail = cluster.fail_probs(item.delta_t_days)[list(mapping)]
+        mp = min_parity_for_target(fail, item.reliability_target)
+        if mp is None or mp > self.p:
+            return Decision(None, 1, "fixed (K,P) cannot meet reliability target")
+        return Decision(Placement(k=self.k, p=self.p, node_ids=mapping), 1, "")
+
+
+# ---------------------------------------------------------------------------
+# §5.2.2 DAOS: EC configs + replication, least storage overhead meeting RT
+# ---------------------------------------------------------------------------
+
+
+class DAOSAdaptive(Scheduler):
+    """Pick, among DAOS's predefined configs, the one meeting the
+    reliability target with the lowest storage overhead (paper §5.2.2).
+
+    Replication 2x/4x/6x is modeled in the erasure-coded representation as
+    K=1 with P = copies-1 (paper §3.1)."""
+
+    name = "daos"
+    # (K, P), ordered by storage overhead N/K ascending:
+    CONFIGS = [(8, 1), (8, 2), (4, 1), (4, 2), (1, 1), (1, 3), (1, 5)]
+
+    def place(self, item: DataItem, cluster: ClusterView) -> Decision:
+        self.observe_item(item)
+        by_bw = self._live_sorted(cluster, cluster.write_bw)
+        fail_all = cluster.fail_probs(item.delta_t_days)
+        considered = 0
+        for k, p in sorted(self.CONFIGS, key=lambda kp: (kp[0] + kp[1]) / kp[0]):
+            considered += 1
+            n = k + p
+            chunk = item.size_mb / k
+            fitting = [int(i) for i in by_bw if cluster.free_mb[i] >= chunk]
+            if len(fitting) < n:
+                continue
+            mapping = tuple(fitting[:n])
+            mp = min_parity_for_target(fail_all[list(mapping)], item.reliability_target)
+            if mp is None or mp > p:
+                continue
+            return Decision(Placement(k=k, p=p, node_ids=mapping), considered, "")
+        return Decision(None, considered, "no DAOS config meets target")
+
+
+# ---------------------------------------------------------------------------
+# Extra baseline (ours): uniform random spread — ablation control
+# ---------------------------------------------------------------------------
+
+
+class RandomSpread(Scheduler):
+    """Uniformly random feasible mapping with HDFS-style EC(6,3); control
+    baseline for ablations (not in the paper)."""
+
+    name = "random_spread"
+
+    def __init__(self, k: int = 6, p: int = 3, seed: int = 0):
+        self.k, self.p = k, p
+        self.rng = np.random.default_rng(seed)
+
+    def place(self, item: DataItem, cluster: ClusterView) -> Decision:
+        self.observe_item(item)
+        n = self.k + self.p
+        chunk = item.size_mb / self.k
+        ids = [int(i) for i in cluster.live_ids() if cluster.free_mb[i] >= chunk]
+        if len(ids) < n:
+            return Decision(None, 1, "not enough nodes with capacity")
+        mapping = tuple(int(x) for x in self.rng.choice(ids, size=n, replace=False))
+        fail = cluster.fail_probs(item.delta_t_days)[list(mapping)]
+        mp = min_parity_for_target(fail, item.reliability_target)
+        if mp is None or mp > self.p:
+            return Decision(None, 1, "fixed (K,P) cannot meet reliability target")
+        return Decision(Placement(k=self.k, p=self.p, node_ids=mapping), 1, "")
+
+
+# ---------------------------------------------------------------------------
+
+
+SCHEDULER_NAMES = [
+    "drex_sc",
+    "drex_lb",
+    "greedy_min_storage",
+    "greedy_least_used",
+    "ec(3,2)",
+    "ec(4,2)",
+    "ec(6,3)",
+    "daos",
+    "random_spread",
+]
+
+
+def make_scheduler(name: str, **kwargs) -> Scheduler:
+    """Factory over every algorithm in the paper (+ controls)."""
+    name = name.lower()
+    if name == "greedy_min_storage":
+        return GreedyMinStorage()
+    if name == "greedy_least_used":
+        return GreedyLeastUsed()
+    if name == "drex_lb":
+        return DRexLB()
+    if name == "drex_sc":
+        return DRexSC(**kwargs)
+    if name.startswith("ec(") and name.endswith(")"):
+        k, p = (int(x) for x in name[3:-1].split(","))
+        return StaticEC(k, p)
+    if name == "daos":
+        return DAOSAdaptive()
+    if name == "random_spread":
+        return RandomSpread(**kwargs)
+    raise ValueError(f"unknown scheduler {name!r}; known: {SCHEDULER_NAMES}")

@@ -1,0 +1,192 @@
+"""Core datatypes shared by the D-Rex algorithms, simulator and checkpointer.
+
+Sizes are in MB (the paper's unit); times in seconds; bandwidths in MB/s;
+``delta_t`` retention windows in days (converted to year-fractions at the
+reliability boundary, matching Eq. 1's convention).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+DAYS_PER_YEAR = 365.25
+
+
+@dataclasses.dataclass
+class StorageNode:
+    """A heterogeneous storage node (paper Table 1 'known' quantities)."""
+
+    node_id: int
+    capacity_mb: float                 # size(S_i)
+    write_bw: float                    # B_w(S_i), MB/s
+    read_bw: float                     # B_r(S_i), MB/s
+    annual_failure_rate: float         # lambda_rate of Eq. (1)
+    name: str = ""
+    used_mb: float = 0.0
+    failed: bool = False
+
+    @property
+    def free_mb(self) -> float:        # F(S_i, t)
+        return self.capacity_mb - self.used_mb
+
+    def pr_failure(self, delta_t_days: float) -> float:
+        from .reliability import pr_failure
+
+        return float(pr_failure(self.annual_failure_rate, delta_t_days / DAYS_PER_YEAR))
+
+    def can_fit(self, chunk_mb: float) -> bool:
+        return not self.failed and self.free_mb >= chunk_mb
+
+
+@dataclasses.dataclass(frozen=True)
+class DataItem:
+    """A store request (paper Table 1, per-item knowns)."""
+
+    item_id: int
+    size_mb: float                     # size(d)
+    arrival_time: float                # submission timestamp (seconds)
+    delta_t_days: float                # retention Delta t_d
+    reliability_target: float          # RT(d) in (0, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """An algorithm's decision for one item: (K, P, M) of Problem 1."""
+
+    k: int                             # data chunks K_d
+    p: int                             # parity chunks P_d
+    node_ids: tuple[int, ...]          # mapping M_d, |M| == k + p
+
+    @property
+    def n(self) -> int:
+        return self.k + self.p
+
+    def chunk_size_mb(self, size_mb: float) -> float:
+        # ceil at MB-fraction granularity is not meaningful for floats;
+        # the paper's ceil(size/K) is over MB — we keep exact division,
+        # consistent for all algorithms being compared.
+        return size_mb / self.k
+
+    def __post_init__(self):
+        if self.k < 1 or self.p < 0:
+            raise ValueError(f"invalid EC parameters K={self.k} P={self.p}")
+        if len(self.node_ids) != self.k + self.p:
+            raise ValueError(
+                f"mapping has {len(self.node_ids)} nodes, need K+P={self.k + self.p}"
+            )
+        if len(set(self.node_ids)) != len(self.node_ids):
+            raise ValueError("mapping nodes must be distinct")
+
+
+@dataclasses.dataclass
+class ClusterView:
+    """Mutable view of the cluster the scheduler sees at decision time.
+
+    Thin wrapper over parallel numpy arrays so the algorithms can operate
+    vectorized; kept in sync by the simulator/checkpoint manager.
+    """
+
+    capacity_mb: np.ndarray
+    used_mb: np.ndarray
+    write_bw: np.ndarray
+    read_bw: np.ndarray
+    afr: np.ndarray
+    alive: np.ndarray                  # bool mask
+
+    @classmethod
+    def from_nodes(cls, nodes: Sequence[StorageNode]) -> "ClusterView":
+        return cls(
+            capacity_mb=np.array([n.capacity_mb for n in nodes], dtype=np.float64),
+            used_mb=np.array([n.used_mb for n in nodes], dtype=np.float64),
+            write_bw=np.array([n.write_bw for n in nodes], dtype=np.float64),
+            read_bw=np.array([n.read_bw for n in nodes], dtype=np.float64),
+            afr=np.array([n.annual_failure_rate for n in nodes], dtype=np.float64),
+            alive=np.array([not n.failed for n in nodes], dtype=bool),
+        )
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.capacity_mb.shape[0])
+
+    @property
+    def free_mb(self) -> np.ndarray:
+        return self.capacity_mb - self.used_mb
+
+    def live_ids(self) -> np.ndarray:
+        return np.nonzero(self.alive)[0]
+
+    def fail_probs(self, delta_t_days: float) -> np.ndarray:
+        from .reliability import pr_failure
+
+        return pr_failure(self.afr, delta_t_days / DAYS_PER_YEAR)
+
+    def commit(self, placement: Placement, chunk_mb: float) -> None:
+        ids = np.asarray(placement.node_ids)
+        self.used_mb[ids] += chunk_mb
+
+    def release(self, node_ids: Sequence[int], chunk_mb: float) -> None:
+        ids = np.asarray(list(node_ids))
+        self.used_mb[ids] -= chunk_mb
+        np.maximum(self.used_mb, 0.0, out=self.used_mb)
+
+    def fail_node(self, node_id: int) -> None:
+        self.alive[node_id] = False
+
+    def copy(self) -> "ClusterView":
+        return ClusterView(
+            self.capacity_mb.copy(), self.used_mb.copy(), self.write_bw.copy(),
+            self.read_bw.copy(), self.afr.copy(), self.alive.copy(),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ECTimeModel:
+    """Linear encode/decode cost model (paper §4.4: linear regression over
+    measurements across sizes and (K, P); functional form follows the IDA
+    complexity analysis the paper's Fig. 1 is based on [28]).
+
+    Reed-Solomon work: each of the P parity chunks is a K-term GF dot
+    product over chunk bytes -> encode work = P * size multiply-adds; a
+    worst-case decode re-applies a KxK matrix -> K * size multiply-adds.
+    Hence (matching Fig. 1: encode ~flat in K at fixed P, decode linear
+    in K):
+
+        T_encode(N, K, size) = e0 + e_byte*size + e_mult*(N-K)*size
+        T_decode(K, size)    = d0 + d_byte*size + d_mult*K*size
+
+    Replication (K == 1) has no coding math (paper §3.1:
+    T_encode = T_decode = 0); only the constant dispatch cost remains.
+
+    Defaults are calibrated against our own GF(2^8) codec measurements
+    (benchmarks/fig1_encode_breakdown.py recalibrates; see EXPERIMENTS.md).
+    """
+
+    e0: float = 1e-3
+    e_byte: float = 2.0e-4             # s per MB striped (memcpy-level)
+    e_mult: float = 1.2e-3             # s per parity-MB GF dot-product
+    d0: float = 1e-3
+    d_byte: float = 2.0e-4
+    d_mult: float = 1.2e-3             # s per (K * MB) GF dot-product
+
+    def t_encode(self, n: int, k: int, size_mb: float) -> float:
+        if k == 1:
+            return self.e0
+        return self.e0 + self.e_byte * size_mb + self.e_mult * (n - k) * size_mb
+
+    def t_decode(self, k: int, size_mb: float) -> float:
+        if k == 1:
+            return self.d0
+        return self.d0 + self.d_byte * size_mb + self.d_mult * k * size_mb
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """Result of one scheduling call."""
+
+    placement: Optional[Placement]     # None => write failed
+    # Diagnostics for benchmarks / EXPERIMENTS.md:
+    candidates_considered: int = 0
+    reason: str = ""

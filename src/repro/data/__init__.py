@@ -1,0 +1,6 @@
+"""Data pipeline: deterministic synthetic LM batches, host-sharded, with
+straggler-mitigation accounting."""
+
+from .pipeline import DataConfig, LMDataPipeline
+
+__all__ = ["DataConfig", "LMDataPipeline"]

@@ -1,0 +1,86 @@
+"""Item-level erasure codec: bytes -> N chunks -> bytes (with erasures).
+
+Wraps the chunk-matrix kernels with the split/pad/join bookkeeping the
+checkpoint manager and benchmarks need. A ``ECCodec(k, p)`` is the data
+plane counterpart of a :class:`repro.core.types.Placement`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+__all__ = ["ECCodec", "encode_item", "decode_item"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ECCodec:
+    k: int
+    p: int
+    use_kernel: bool = True
+
+    @property
+    def n(self) -> int:
+        return self.k + self.p
+
+    def chunk_len(self, nbytes: int) -> int:
+        return -(-nbytes // self.k)  # ceil(size / K), paper Table 1
+
+    def encode(self, payload: bytes | np.ndarray) -> np.ndarray:
+        """bytes -> (N, chunk_len) uint8: K data rows then P parity rows."""
+        buf = np.frombuffer(bytes(payload), dtype=np.uint8) if isinstance(
+            payload, (bytes, bytearray)
+        ) else np.asarray(payload, dtype=np.uint8).ravel()
+        clen = self.chunk_len(buf.size)
+        padded = np.zeros(self.k * clen, dtype=np.uint8)
+        padded[: buf.size] = buf
+        data = padded.reshape(self.k, clen)
+        parity = np.asarray(
+            kops.encode_chunks(data, self.p, use_kernel=self.use_kernel)
+        )
+        return np.concatenate([data, parity], axis=0)
+
+    def decode(
+        self,
+        chunks: np.ndarray,
+        rows: np.ndarray,
+        orig_nbytes: int,
+    ) -> bytes:
+        """Any K chunk rows (+ their row indices) -> original payload."""
+        chunks = np.asarray(chunks, dtype=np.uint8)
+        rows = np.asarray(rows)
+        if chunks.shape[0] < self.k:
+            raise ValueError(
+                f"need at least K={self.k} chunks, got {chunks.shape[0]}"
+            )
+        sel = np.argsort(rows)[: self.k]  # deterministic choice of K rows
+        use_rows = rows[sel]
+        use_chunks = chunks[sel]
+        if np.array_equal(use_rows, np.arange(self.k)):
+            data = use_chunks  # all-systematic fast path: no math
+        else:
+            data = np.asarray(
+                kops.decode_chunks(
+                    use_chunks, use_rows, self.k, self.p, use_kernel=self.use_kernel
+                )
+            )
+        return data.reshape(-1)[:orig_nbytes].tobytes()
+
+
+def encode_item(payload: bytes, k: int, p: int, use_kernel: bool = True) -> np.ndarray:
+    return ECCodec(k, p, use_kernel).encode(payload)
+
+
+def decode_item(
+    chunks: np.ndarray,
+    rows: np.ndarray,
+    k: int,
+    p: int,
+    orig_nbytes: int,
+    use_kernel: bool = True,
+) -> bytes:
+    return ECCodec(k, p, use_kernel).decode(chunks, rows, orig_nbytes)

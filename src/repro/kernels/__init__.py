@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the paper's compute hot-spot (EC coding)."""
+
+from . import ops, ref
+from .rs_bitmatmul import gf_bitmatmul, DEFAULT_BLOCK_BYTES
+
+__all__ = ["ops", "ref", "gf_bitmatmul", "DEFAULT_BLOCK_BYTES"]

@@ -1,0 +1,79 @@
+"""Jit'd public wrappers over the coding kernels.
+
+``encode_chunks`` / ``decode_chunks`` operate on (K, B) byte matrices and
+handle padding to the kernel's block size; ``repro.ec.codec`` builds the
+item-level API (split/join, chunk manifests) on top of these.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.ec import gf256
+from .rs_bitmatmul import DEFAULT_BLOCK_BYTES, gf_bitmatmul
+from . import ref as _ref
+
+__all__ = ["encode_chunks", "decode_chunks", "encode_chunks_ref", "decode_chunks_ref"]
+
+
+def _bitmatrix_for(m: np.ndarray) -> jnp.ndarray:
+    return jnp.asarray(gf256.gf_to_bitmatrix(m), dtype=jnp.float32)
+
+
+def _pad_to_block(data: jax.Array, block: int) -> tuple[jax.Array, int]:
+    k, b = data.shape
+    rem = (-b) % block
+    if rem:
+        data = jnp.pad(data, ((0, 0), (0, rem)))
+    return data, b
+
+
+def encode_chunks(
+    data_chunks,
+    p: int,
+    *,
+    block_bytes: int = DEFAULT_BLOCK_BYTES,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Parity chunks (P, B) for systematic Cauchy-RS over (K, B) data."""
+    data = jnp.asarray(data_chunks, dtype=jnp.uint8)
+    k = data.shape[0]
+    cauchy = gf256.cauchy_matrix(p, k)
+    if not use_kernel:
+        return _ref.encode_ref(data, jnp.asarray(cauchy))
+    padded, b = _pad_to_block(data, block_bytes)
+    out = gf_bitmatmul(_bitmatrix_for(cauchy), padded, block_bytes=block_bytes)
+    return out[:, :b]
+
+
+def decode_chunks(
+    surviving_chunks,
+    surviving_rows,
+    k: int,
+    p: int,
+    *,
+    block_bytes: int = DEFAULT_BLOCK_BYTES,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Reconstruct the K data chunks from any K surviving chunk rows.
+
+    ``surviving_rows``: indices into the N=K+P rows matching the order of
+    ``surviving_chunks`` (K, B)."""
+    surv = jnp.asarray(surviving_chunks, dtype=jnp.uint8)
+    dec = gf256.decode_matrix(k, p, np.asarray(surviving_rows))
+    if not use_kernel:
+        return _ref.decode_ref(surv, jnp.asarray(dec))
+    padded, b = _pad_to_block(surv, block_bytes)
+    out = gf_bitmatmul(_bitmatrix_for(dec), padded, block_bytes=block_bytes)
+    return out[:, :b]
+
+
+def encode_chunks_ref(data_chunks, p: int) -> jax.Array:
+    """Oracle path (pure jnp log/exp tables)."""
+    return encode_chunks(data_chunks, p, use_kernel=False)
+
+
+def decode_chunks_ref(surviving_chunks, surviving_rows, k: int, p: int) -> jax.Array:
+    return decode_chunks(surviving_chunks, surviving_rows, k, p, use_kernel=False)

@@ -1,0 +1,81 @@
+"""Pure-jnp oracle for the GF(2^8) coding kernels.
+
+This is the "CPU algorithm" the paper's encode/decode hot-spot uses:
+log/exp-table multiplication with XOR accumulation. It defines the
+semantics the Pallas bit-matrix kernel must match bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ec.gf256 import GF_EXP, GF_LOG
+
+_EXP = jnp.asarray(GF_EXP)          # (512,) uint8, doubled
+_LOG = jnp.asarray(GF_LOG)          # (256,) int32
+
+
+def gf_mul_ref(a, b):
+    """Elementwise GF(2^8) multiply via log/exp tables (jnp)."""
+    a = jnp.asarray(a, dtype=jnp.uint8)
+    b = jnp.asarray(b, dtype=jnp.uint8)
+    la = _LOG[a.astype(jnp.int32)]
+    lb = _LOG[b.astype(jnp.int32)]
+    out = _EXP[la + lb]
+    return jnp.where((a == 0) | (b == 0), jnp.uint8(0), out)
+
+
+def gf_matmul_ref(m, data):
+    """(R, K) GF matrix times (K, B) byte matrix -> (R, B) bytes.
+
+    products[r, k, b] XOR-reduced over k; this is exactly the dot product
+    structure the paper's Fig. 1 measures (R*K*B multiply-XOR ops).
+    """
+    m = jnp.asarray(m, dtype=jnp.uint8)
+    data = jnp.asarray(data, dtype=jnp.uint8)
+    r, k = m.shape
+    k2, b = data.shape
+    assert k == k2, (m.shape, data.shape)
+
+    def body(i, acc):
+        prod = gf_mul_ref(m[:, i][:, None], data[i][None, :])
+        return acc ^ prod
+
+    return jax.lax.fori_loop(0, k, body, jnp.zeros((r, b), dtype=jnp.uint8))
+
+
+def encode_ref(data_chunks, cauchy):
+    """Systematic encode: parity (P, B) = C (P, K) x data (K, B)."""
+    return gf_matmul_ref(cauchy, data_chunks)
+
+
+def decode_ref(surviving_chunks, dec_matrix):
+    """Reconstruct data (K, B) from K surviving chunks via the inverted
+    generator submatrix (K, K)."""
+    return gf_matmul_ref(dec_matrix, surviving_chunks)
+
+
+def bitmatmul_ref(bit_matrix, data_chunks):
+    """Mod-2 bit-matrix product with explicit unpack/pack — the semantic
+    spec of the Pallas kernel, in plain jnp (no pallas).
+
+    bit_matrix: (8R, 8K) in {0,1}; data_chunks: (K, B) uint8.
+    Returns (R, B) uint8. Must equal gf_matmul_ref(m, data) when
+    bit_matrix = gf_to_bitmatrix(m).
+    """
+    bm = jnp.asarray(bit_matrix, dtype=jnp.float32)
+    d = jnp.asarray(data_chunks, dtype=jnp.uint8)
+    k, b = d.shape
+    r8 = bm.shape[0]
+    assert bm.shape[1] == 8 * k
+    shifts = jnp.arange(8, dtype=jnp.int32)
+    bits = (d.astype(jnp.int32)[:, None, :] >> shifts[None, :, None]) & 1  # (K,8,B)
+    bits = bits.reshape(8 * k, b).astype(jnp.float32)
+    acc = bm @ bits                                  # exact integers in f32
+    par_bits = acc.astype(jnp.int32) & 1             # mod 2
+    par_bits = par_bits.reshape(r8 // 8, 8, b)
+    weights = (1 << shifts).astype(jnp.int32)
+    out = (par_bits * weights[None, :, None]).sum(axis=1)
+    return out.astype(jnp.uint8)

@@ -1,0 +1,5 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve drivers."""
+
+from .mesh import make_local_mesh, make_production_mesh
+
+__all__ = ["make_production_mesh", "make_local_mesh"]

@@ -1,0 +1,286 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import (device count locks at first init). The
+# production mesh needs 512 placeholder devices; smoke tests/benches run
+# in separate processes and see the host's real single device.
+
+"""Multi-pod dry-run driver (deliverable (e)).
+
+For every valid (architecture x input-shape) cell, lowers + compiles the
+step function on the single-pod 16x16 mesh and the 2x16x16 multi-pod
+mesh, prints ``memory_analysis()`` / ``cost_analysis()``, and records the
+roofline terms (jaxpr FLOPs, per-device HLO bytes, collective bytes by
+type) to JSON for EXPERIMENTS.md.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, ARCH_IDS, cell_supported, get_config, input_specs, normalize
+from repro.launch.mesh import make_production_mesh
+from repro.models import decode_step, init_params, param_axes, prefill
+from repro.models import init_serve_state, serve_state_axes
+from repro.models.config import ModelConfig
+from repro.models.sharding import activate_mesh, logical_to_spec, rules_for
+from repro.optim import AdamWConfig
+from repro.roofline import RooflineTerms, analyze_hlo, count_fn_flops, model_flops_for
+from repro.train import init_train_state, make_train_step, train_state_shardings, batch_shardings
+
+
+def _tree_shardings_from_axes(axes_tree, shapes_tree, mesh):
+    rules = rules_for(mesh)
+    return jax.tree.map(
+        lambda ax, shp: NamedSharding(mesh, logical_to_spec(ax, shp.shape, mesh, rules)),
+        axes_tree,
+        shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def _params_shardings(cfg: ModelConfig, mesh):
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    return _tree_shardings_from_axes(param_axes(cfg), shapes, mesh)
+
+
+def _apply_overrides(cfg, overrides):
+    if not overrides:
+        return cfg
+    kw = {}
+    for ov in overrides:
+        k, v = ov.split("=", 1)
+        cur = getattr(cfg, k)
+        if isinstance(cur, bool):
+            v = v.lower() in ("1", "true", "yes")
+        elif isinstance(cur, int):
+            v = int(v)
+        elif isinstance(cur, float):
+            v = float(v)
+        kw[k] = v
+    return cfg.with_(**kw)
+
+
+def lower_cell(arch: str, shape: str, mesh, mesh_name: str, overrides=()):
+    """Lower+compile one cell; returns (lowered, compiled, fn_flops, specs)."""
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    cfg = cfg.with_(max_cache_len=spec.seq_len)
+    cfg = _apply_overrides(cfg, overrides)
+    specs = input_specs(cfg, shape)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    if spec.kind == "train":
+        step = make_train_step(cfg, AdamWConfig(), mesh)
+        state_shapes = jax.eval_shape(
+            lambda: init_train_state(cfg, jax.random.PRNGKey(0))
+        )
+        with activate_mesh(mesh), mesh:
+            lowered = step.fn.lower(state_shapes, specs["batch"])
+        # jaxpr flops: trace the un-jitted step (same math, no shardings)
+        flops = count_fn_flops(_raw_train_step(cfg), state_shapes, specs["batch"])
+    elif spec.kind == "prefill":
+        p_sh = _params_shardings(cfg, mesh)
+        tok_sh = NamedSharding(mesh, P(dp, None))
+        in_sh = {"tokens": tok_sh}
+        args = {"tokens": specs["tokens"]}
+        if cfg.is_encdec:
+            in_sh["frames"] = NamedSharding(mesh, P(dp, None, None))
+            args["frames"] = specs["frames"]
+        fn = lambda params, tokens, frames=None: prefill(params, tokens, cfg, frames)
+        jf = jax.jit(fn, in_shardings=(p_sh, tok_sh) if not cfg.is_encdec else (p_sh, tok_sh, in_sh["frames"]))
+        pshapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+        with activate_mesh(mesh), mesh:
+            if cfg.is_encdec:
+                lowered = jf.lower(pshapes, args["tokens"], args["frames"])
+            else:
+                lowered = jf.lower(pshapes, args["tokens"])
+        flops = count_fn_flops(
+            (lambda p, t, f: prefill(p, t, cfg, f)) if cfg.is_encdec else (lambda p, t: prefill(p, t, cfg)),
+            pshapes, *( [args["tokens"], args["frames"]] if cfg.is_encdec else [args["tokens"]] ),
+        )
+    else:  # decode
+        p_sh = _params_shardings(cfg, mesh)
+        state_shapes = specs["state"]
+        st_axes = serve_state_axes(cfg, state_shapes)
+        st_sh = _tree_shardings_from_axes(st_axes, state_shapes, mesh)
+        # divisibility-aware: long_500k's global_batch=1 cannot shard over
+        # the data axes and falls back to replication.
+        tok_sh = NamedSharding(
+            mesh,
+            logical_to_spec(("batch", None), specs["token"].shape, mesh),
+        )
+        pos_sh = NamedSharding(mesh, P())
+        fn = lambda params, token, pos, state: decode_step(params, token, pos, state, cfg)
+        jf = jax.jit(fn, in_shardings=(p_sh, tok_sh, pos_sh, st_sh))
+        pshapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+        with activate_mesh(mesh), mesh:
+            lowered = jf.lower(pshapes, specs["token"], specs["pos"], state_shapes)
+        flops = count_fn_flops(fn, pshapes, specs["token"], specs["pos"], state_shapes)
+
+    compiled = lowered.compile()
+    return cfg, lowered, compiled, flops
+
+
+def _raw_train_step(cfg: ModelConfig):
+    from repro.models import loss_fn
+    from repro.optim import adamw_update
+    from repro.train.step import TrainState
+
+    opt_cfg = AdamWConfig()
+
+    def raw(state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg), has_aux=True
+        )(state.params)
+        new_params, new_opt, om = adamw_update(opt_cfg, grads, state.opt, state.params)
+        return TrainState(new_params, new_opt, state.comp), loss
+
+    return raw
+
+
+def run_cell(arch: str, shape: str, mesh_name: str, out_dir: pathlib.Path, overrides=(), suffix: str = "") -> dict:
+    arch = normalize(arch)
+    cfg0 = get_config(arch)
+    ok, why = cell_supported(cfg0, shape)
+    rec: dict = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                 "overrides": list(overrides), "variant": suffix or "baseline"}
+    if not ok:
+        rec.update({"status": "skipped", "reason": why})
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = mesh.size
+    t0 = time.time()
+    try:
+        cfg, lowered, compiled, flops = lower_cell(arch, shape, mesh, mesh_name, overrides)
+    except Exception as e:
+        rec.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:]})
+        return rec
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    mem_d = {}
+    for attr in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "peak_memory_in_bytes",
+    ):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            mem_d[attr] = int(v)
+    print(f"[dryrun] {arch} x {shape} x {mesh_name}: memory_analysis={mem_d}")
+    print(f"[dryrun] cost_analysis flops={cost.get('flops')} "
+          f"bytes={cost.get('bytes accessed')} (while bodies counted once — "
+          f"see roofline JSON for trip-count-corrected terms)")
+
+    hlo_text = compiled.as_text()
+    try:  # persist for offline re-analysis (zstd-compressed)
+        import zstandard
+
+        hdir = out_dir.parent / "hlo"
+        hdir.mkdir(parents=True, exist_ok=True)
+        (hdir / f"{arch}__{shape}__{mesh_name}{suffix}.hlo.zst").write_bytes(
+            zstandard.ZstdCompressor(level=3).compress(hlo_text.encode())
+        )
+    except Exception:
+        pass
+    hlo = analyze_hlo(hlo_text)
+    spec = SHAPES[shape]
+    terms = RooflineTerms(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        global_flops=flops.total,
+        per_device_hbm_bytes=hlo.memory_bytes_ideal,
+        per_device_collective_bytes=hlo.total_collective_bytes,
+        per_device_hbm_bytes_raw=hlo.memory_bytes,
+        collective_breakdown={k: v for k, v in hlo.collective_bytes.items() if v},
+        model_flops=model_flops_for(cfg, spec.kind, spec.seq_len, spec.global_batch),
+        hlo_dot_flops_per_device=hlo.dot_flops,
+    )
+    rec.update(
+        {
+            "status": "ok",
+            "compile_s": t_compile,
+            "chips": chips,
+            "memory_analysis": mem_d,
+            "cost_analysis": {k: float(v) for k, v in cost.items() if isinstance(v, (int, float))},
+            "jaxpr_flops": {"dot": flops.dot_flops, "elementwise": flops.elementwise_flops},
+            "roofline": terms.to_dict(),
+            "n_collective_ops": hlo.n_collectives,
+        }
+    )
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{arch}__{shape}__{mesh_name}{suffix}.json").write_text(json.dumps(rec, indent=2))
+    print(
+        f"[dryrun] OK {arch} x {shape} x {mesh_name}: compile={t_compile:.1f}s "
+        f"compute={terms.compute_s*1e3:.2f}ms memory={terms.memory_s*1e3:.2f}ms "
+        f"collective={terms.collective_s*1e3:.2f}ms bottleneck={terms.bottleneck} "
+        f"roofline_frac={terms.roofline_fraction:.3f}",
+        flush=True,
+    )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--set", action="append", default=[], dest="overrides",
+                    help="config override key=value (repeatable)")
+    ap.add_argument("--suffix", default="", help="output filename suffix for variants")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells.append((normalize(args.arch), args.shape))
+
+    summary = []
+    for arch, shape in cells:
+        for mesh_name in meshes:
+            if args.skip_existing and (
+                out_dir / f"{normalize(arch)}__{shape}__{mesh_name}.json"
+            ).exists():
+                print(f"[dryrun] skip existing {arch} x {shape} x {mesh_name}")
+                continue
+            rec = run_cell(arch, shape, mesh_name, out_dir, tuple(args.overrides), args.suffix)
+            summary.append(
+                (arch, shape, mesh_name, rec.get("status"), rec.get("reason") or rec.get("error", ""))
+            )
+    print("\n=== dry-run summary ===")
+    for row in summary:
+        print(" ", " | ".join(str(x) for x in row))
+    bad = [r for r in summary if r[3] == "error"]
+    if bad:
+        raise SystemExit(f"{len(bad)} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Model zoo: composable decoder stacks covering all assigned families."""
+
+from .config import EncoderConfig, ModelConfig, MoEConfig
+from .model import (
+    decode_step,
+    forward,
+    init_params,
+    init_serve_state,
+    loss_fn,
+    param_axes,
+    prefill,
+    serve_state_axes,
+)
+
+__all__ = [
+    "ModelConfig",
+    "MoEConfig",
+    "EncoderConfig",
+    "init_params",
+    "param_axes",
+    "forward",
+    "loss_fn",
+    "prefill",
+    "decode_step",
+    "init_serve_state",
+    "serve_state_axes",
+]

@@ -1,0 +1,444 @@
+"""Core neural layers: norms, RoPE, GQA attention, MLP variants, MoE.
+
+Pure-functional: ``init_*`` builds param dicts (leaves: jnp arrays),
+``*_axes`` builds the parallel tree of logical-axis tuples used by the
+sharding rules, and apply functions are jit-safe with static shapes.
+Compute dtype follows ``cfg.dt`` (bf16 by default); softmax/logits run in
+f32.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .sharding import constrain
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, in_axis: int = 0):
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else int(
+        np.prod([shape[a] for a in in_axis])
+    )
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float = 1e-6, stats_only_f32: bool = False):
+    dt = x.dtype
+    if stats_only_f32:
+        # f32 statistic, compute-dtype normalization: the (B,T,E) tensor
+        # ops (and their backward) stay bf16; only the (B,T,1) statistic
+        # is f32.
+        var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+        inv = jax.lax.rsqrt(var + eps).astype(dt)
+        return x * inv * scale.astype(dt)
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (half-rotation)
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float):
+    """x: (..., T, H, D); positions: (..., T) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., T, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, optional qk-norm / local window / cross-attention)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(cfg: ModelConfig, key, cross: bool = False) -> dict:
+    e, h, hd = cfg.d_model, cfg.dhead, cfg.dhead
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (e, nh, hd), cfg.dt),
+        "wk": dense_init(ks[1], (e, nkv, hd), cfg.dt),
+        "wv": dense_init(ks[2], (e, nkv, hd), cfg.dt),
+        "wo": dense_init(ks[3], (nh, hd, e), cfg.dt, in_axis=(0, 1)),
+    }
+    if cfg.use_qk_norm and not cross:
+        p["q_norm"] = jnp.ones((hd,), cfg.dt)
+        p["k_norm"] = jnp.ones((hd,), cfg.dt)
+    return p
+
+
+def attention_axes(cfg: ModelConfig, cross: bool = False) -> dict:
+    a = {
+        "wq": ("embed", "heads", None),
+        "wk": ("embed", "kv_heads", None),
+        "wv": ("embed", "kv_heads", None),
+        "wo": ("heads", None, "embed"),
+    }
+    if cfg.use_qk_norm and not cross:
+        a["q_norm"] = (None,)
+        a["k_norm"] = (None,)
+    return a
+
+
+def _qkv(p, x, x_kv, cfg: ModelConfig, positions, kv_positions, use_rope=True):
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x_kv, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x_kv, p["wv"])
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """Grouped scaled-dot-product attention.
+
+    q: (B,T,Hq,D); k/v: (B,S,Hkv,D); mask: (T,S) bool or None.
+    """
+    b, t, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    q = q.reshape(b, t, hkv, g, d)
+    scores = jnp.einsum("bthgd,bshd->bhgts", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(d)
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgts,bshd->bthgd", probs, v)
+    return out.reshape(b, t, hq, d)
+
+
+def blockwise_sdpa(q, k, v, cfg: ModelConfig, window: int = 0, q_offset: int = 0):
+    """Flash-style streaming attention (beyond-paper §Perf optimization).
+
+    Scans query blocks; per query block an inner scan over KV blocks keeps
+    the online-softmax state (m, l, acc) — the (T, S) score/prob tensors
+    are never materialized, so HBM traffic drops from O(T*S) per layer to
+    O(T*bk + S). The per-q-block body is rematerialized in the backward
+    pass (jax.checkpoint), keeping residuals at O(T*D) like the rest of
+    the layer.
+
+    Causal and local-window masks are generated from block indices (no
+    materialized mask). Cross-/bidirectional attention keeps the dense
+    path (encoder sequences are short).
+    """
+    b, t, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    bq = min(cfg.attn_block_q, t)
+    bk = min(cfg.attn_block_kv, s)
+    assert t % bq == 0 and s % bk == 0, (t, s, bq, bk)
+    nq, nk = t // bq, s // bk
+    scale = 1.0 / math.sqrt(d)
+
+    qb = q.reshape(b, nq, bq, hkv, g, d).transpose(1, 0, 2, 3, 4, 5)
+    kb = k.reshape(b, nk, bk, hkv, d).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nk, bk, hkv, d).transpose(1, 0, 2, 3, 4)
+
+    def one_q_block(qi, q_blk):
+        qpos = q_offset + qi * bq + jnp.arange(bq)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kj, k_blk, v_blk = inp
+            kpos = kj * bk + jnp.arange(bk)
+            sc = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", q_blk, k_blk,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            valid = kpos[None, :] <= qpos[:, None]
+            if window > 0:
+                valid &= kpos[None, :] > qpos[:, None] - window
+            sc = jnp.where(valid[None, None, None, :, :], sc, -1e30)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            pv = jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32,
+            )
+            acc_new = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, bq), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, bq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, bq, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kb, vb)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # (b,bq,hkv,g,d)
+
+    out_blocks = jax.lax.scan(
+        lambda _, inp: (None, jax.checkpoint(one_q_block)(inp[0], inp[1])),
+        None,
+        (jnp.arange(nq), qb),
+    )[1]                                                     # (nq,b,bq,hkv,g,d)
+    out = out_blocks.transpose(1, 0, 2, 3, 4, 5).reshape(b, t, hq, d)
+    return out
+
+
+def self_attention(q, k, v, cfg: ModelConfig, window: int = 0, q_offset: int = 0):
+    """Causal self-attention dispatch: dense vs blockwise per config."""
+    t, s = q.shape[1], k.shape[1]
+    if (
+        cfg.attn_impl == "blockwise"
+        and t % min(cfg.attn_block_q, t) == 0
+        and s % min(cfg.attn_block_kv, s) == 0
+        and t > 1
+    ):
+        return blockwise_sdpa(q, k, v, cfg, window=window, q_offset=q_offset)
+    return _sdpa(q, k, v, causal_mask(t, s, window, offset=q_offset), cfg)
+
+
+def causal_mask(t: int, s: int, window: int = 0, offset: int = 0):
+    """(T, S) bool where query i attends key j iff j <= i+offset and, for a
+    local window w, j > i+offset-w."""
+    qi = jnp.arange(t)[:, None] + offset
+    kj = jnp.arange(s)[None, :]
+    m = kj <= qi
+    if window > 0:
+        m &= kj > qi - window
+    return m
+
+
+def attention_full(p, x, cfg: ModelConfig, positions, window: int = 0):
+    """Full-sequence causal self-attention (train / prefill)."""
+    q, k, v = _qkv(p, x, x, cfg, positions, positions)
+    k = constrain(k, ("batch", None, "kv_heads", None))
+    v = constrain(v, ("batch", None, "kv_heads", None))
+    out = self_attention(q, k, v, cfg, window=window)
+    return jnp.einsum(
+        "bthd,hde->bte", out, p["wo"], preferred_element_type=_tp_out_dtype(cfg)
+    )
+
+
+def attention_decode(p, x, cache, pos, cfg: ModelConfig, window: int = 0, ring: bool = False):
+    """One-token decode against a pre-allocated KV cache.
+
+    x: (B,1,E); cache: {"k","v"}: (B,S,Hkv,D); pos: scalar int32 — the
+    *true* sequence position of the new token (RoPE uses this).
+
+    ``ring=False``: the cache holds absolute positions 0..S-1 and ``pos``
+    is also the write index (optionally with a local ``window`` mask).
+
+    ``ring=True``: the cache is a rolling window of the last S positions;
+    the write index is ``pos % S`` and every slot written so far is valid
+    (RoPE rotations are absolute per token, so relative offsets survive
+    the wrap). Used by the griffin local-attention blocks.
+
+    Returns (out (B,1,E), new_cache).
+    """
+    s = cache["k"].shape[1]
+    positions = jnp.full((x.shape[0], 1), pos, dtype=jnp.int32)
+    q, k1, v1 = _qkv(p, x, x, cfg, positions, positions)
+    widx = jnp.mod(pos, s) if ring else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k1.astype(cache["k"].dtype), (0, widx, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v1.astype(cache["v"].dtype), (0, widx, 0, 0))
+    kj = jnp.arange(s)[None, :]
+    if ring:
+        valid = (kj <= pos) | jnp.full((1, s), pos >= s)
+    else:
+        valid = kj <= pos
+        if window > 0:
+            valid = valid & (kj > pos - window)
+    out = _sdpa(q, ck, cv, valid, cfg)
+    return jnp.einsum("bthd,hde->bte", out, p["wo"]), {"k": ck, "v": cv}
+
+
+def attention_cross(p, x, enc_kv, cfg: ModelConfig):
+    """Cross-attention against precomputed encoder K/V (whisper decoder)."""
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    out = _sdpa(q, enc_kv["k"], enc_kv["v"], None, cfg)
+    return jnp.einsum("bthd,hde->bte", out, p["wo"])
+
+
+def encode_cross_kv(p, enc_out, cfg: ModelConfig) -> dict:
+    return {
+        "k": jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"]),
+        "v": jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"]),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(cfg: ModelConfig, key, d_ff: Optional[int] = None) -> dict:
+    e = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.activation == "squared_relu":
+        return {
+            "wi": dense_init(ks[0], (e, f), cfg.dt),
+            "wo": dense_init(ks[1], (f, e), cfg.dt),
+        }
+    return {
+        "wg": dense_init(ks[0], (e, f), cfg.dt),
+        "wi": dense_init(ks[1], (e, f), cfg.dt),
+        "wo": dense_init(ks[2], (f, e), cfg.dt),
+    }
+
+
+def mlp_axes(cfg: ModelConfig) -> dict:
+    if cfg.activation == "squared_relu":
+        return {"wi": ("embed", "mlp"), "wo": ("mlp", "embed")}
+    return {
+        "wg": ("embed", "mlp"),
+        "wi": ("embed", "mlp"),
+        "wo": ("mlp", "embed"),
+    }
+
+
+def _tp_out_dtype(cfg: ModelConfig):
+    return cfg.dt if cfg.tp_reduce_bf16 else None
+
+
+def mlp_apply(p, x, cfg: ModelConfig):
+    pet = _tp_out_dtype(cfg)
+    if cfg.activation == "squared_relu":
+        h = jnp.einsum("btd,df->btf", x, p["wi"])
+        h = jnp.square(jax.nn.relu(h))
+        return jnp.einsum("btf,fd->btd", h, p["wo"], preferred_element_type=pet)
+    act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
+    g = act(jnp.einsum("btd,df->btf", x, p["wg"]))
+    h = g * jnp.einsum("btd,df->btf", x, p["wi"])
+    h = constrain(h, ("batch", None, "mlp"))
+    return jnp.einsum("btf,fd->btd", h, p["wo"], preferred_element_type=pet)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (top-k, capacity-bounded scatter dispatch)
+# ---------------------------------------------------------------------------
+
+
+def init_moe(cfg: ModelConfig, key) -> dict:
+    m = cfg.moe
+    e, f = cfg.d_model, m.expert_d_ff
+    ep = m.n_experts_padded   # GShard-style padding for even EP sharding
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (e, ep), jnp.float32),
+        "wg": dense_init(ks[1], (ep, e, f), cfg.dt, in_axis=1),
+        "wi": dense_init(ks[2], (ep, e, f), cfg.dt, in_axis=1),
+        "wo": dense_init(ks[3], (ep, f, e), cfg.dt, in_axis=1),
+    }
+    if m.n_shared_experts:
+        p["shared"] = init_mlp(cfg, ks[4], d_ff=m.n_shared_experts * f)
+    return p
+
+
+def moe_axes(cfg: ModelConfig) -> dict:
+    a = {
+        "router": ("embed", "experts"),
+        "wg": ("experts", "embed", "expert_mlp"),
+        "wi": ("experts", "embed", "expert_mlp"),
+        "wo": ("experts", "expert_mlp", "embed"),
+    }
+    if cfg.moe.n_shared_experts:
+        a["shared"] = mlp_axes(cfg)
+    return a
+
+
+def moe_apply(p, x, cfg: ModelConfig):
+    """Top-k MoE with capacity-bounded scatter dispatch.
+
+    Tokens route to their top-k experts; each expert processes at most
+    C = ceil(S*k/E * capacity_factor) tokens (overflow dropped, standard
+    GShard semantics). Returns (out, aux_loss).
+    """
+    m = cfg.moe
+    ep = m.n_experts_padded
+    b, t, e = x.shape
+    s = b * t
+    xt = x.reshape(s, e)
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (S, Ep)
+    if ep != m.n_experts:   # padded experts never win routing
+        pad_mask = jnp.arange(ep) >= m.n_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_ids = jax.lax.top_k(probs, m.experts_per_token)  # (S, k)
+    if m.norm_topk:
+        top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # load-balancing auxiliary loss (Switch/GShard form)
+    density = jnp.mean(
+        jax.nn.one_hot(top_ids[:, 0], ep, dtype=jnp.float32), axis=0
+    )
+    density_prob = jnp.mean(probs, axis=0)
+    aux = m.router_aux_coef * m.n_experts * jnp.sum(density * density_prob)
+
+    if cfg.moe_dispatch == "shard_map":
+        from .sharding import _ACTIVE_MESH
+        from .moe_shardmap import moe_apply_shardmap
+
+        mesh = _ACTIVE_MESH[0]
+        if mesh is not None and not mesh.empty and "model" in mesh.axis_names \
+                and ep % mesh.shape["model"] == 0:
+            out = moe_apply_shardmap(p, x, cfg, mesh)
+            if "shared" in p:
+                out = out + mlp_apply(p["shared"], x, cfg)
+            return out, aux
+
+    cap = int(math.ceil(s * m.experts_per_token / m.n_experts * m.capacity_factor))
+    flat_ids = top_ids.reshape(-1)                              # (S*k,)
+    flat_w = top_w.reshape(-1)
+    # position of each (token, slot) within its expert queue
+    one_hot = jax.nn.one_hot(flat_ids, ep, dtype=jnp.int32)
+    pos = jnp.cumsum(one_hot, axis=0) * one_hot - one_hot        # (S*k, E)
+    slot = jnp.sum(pos, axis=1)                                  # (S*k,)
+    keep = slot < cap
+    slot_c = jnp.where(keep, slot, 0)
+
+    xe = jnp.repeat(xt, m.experts_per_token, axis=0)             # (S*k, D)
+    dispatched = jnp.zeros((ep, cap, e), x.dtype)
+    dispatched = dispatched.at[flat_ids, slot_c].add(
+        jnp.where(keep[:, None], xe, 0).astype(x.dtype)
+    )
+    dispatched = constrain(dispatched, ("experts", None, None))
+
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", dispatched, p["wg"]))
+    h = g * jnp.einsum("ecd,edf->ecf", dispatched, p["wi"])
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["wo"])
+    out_e = constrain(out_e, ("experts", None, None))
+
+    gathered = out_e[flat_ids, slot_c]                           # (S*k, D)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    combined = (gathered * flat_w[:, None].astype(gathered.dtype)).reshape(
+        s, m.experts_per_token, e
+    ).sum(axis=1)
+    out = combined.reshape(b, t, e)
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], x, cfg)
+    return out, aux

@@ -1,0 +1,702 @@
+"""Model assembly: init / forward / loss / prefill / decode for all ten
+assigned architectures.
+
+Layer stacks are scanned (``lax.scan`` over stacked params) with
+configurable remat, keeping HLO size ~constant in depth (96-layer
+nemotron-340b lowers as fast as 4-layer whisper-tiny). Heterogeneous
+stacks (griffin's R,R,A pattern; whisper's enc/dec) scan over homogeneous
+sub-stacks.
+
+Three entry points per architecture (the dry-run lowers each):
+  * ``loss_fn``      — full-seq training objective (train_4k)
+  * ``prefill``      — full forward returning serve state (prefill_32k)
+  * ``decode_step``  — one token against the serve state (decode_32k,
+                       long_500k for the sub-quadratic families)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (
+    attention_axes,
+    attention_cross,
+    attention_decode,
+    attention_full,
+    causal_mask,
+    dense_init,
+    encode_cross_kv,
+    init_attention,
+    init_mlp,
+    init_moe,
+    mlp_apply,
+    mlp_axes,
+    moe_apply,
+    moe_axes,
+    rms_norm,
+)
+from .recurrent import (
+    init_rglru_block,
+    init_rwkv6_cmix,
+    init_rwkv6_tmix,
+    rglru_block,
+    rglru_block_axes,
+    rwkv6_cmix,
+    rwkv6_cmix_axes,
+    rwkv6_tmix,
+    rwkv6_tmix_axes,
+)
+from .sharding import constrain
+
+def rms_norm_cfg(x, scale, cfg):
+    return rms_norm(x, scale, cfg.norm_eps, stats_only_f32=cfg.norm_stats_only_f32)
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / axes
+# ---------------------------------------------------------------------------
+
+
+def _init_block(cfg: ModelConfig, key) -> dict:
+    """One decoder block's params (unstacked)."""
+    ks = jax.random.split(key, 8)
+    if cfg.block_pattern == "rwkv6":
+        return {
+            "norm1": jnp.ones((cfg.d_model,), cfg.dt),
+            "tmix": init_rwkv6_tmix(cfg, ks[0]),
+            "norm2": jnp.ones((cfg.d_model,), cfg.dt),
+            "cmix": init_rwkv6_cmix(cfg, ks[1]),
+        }
+    p = {
+        "norm1": jnp.ones((cfg.d_model,), cfg.dt),
+        "attn": init_attention(cfg, ks[0]),
+        "norm2": jnp.ones((cfg.d_model,), cfg.dt),
+    }
+    if cfg.moe is not None:
+        p["moe"] = init_moe(cfg, ks[1])
+    else:
+        p["mlp"] = init_mlp(cfg, ks[1])
+    if cfg.is_encdec:
+        p["norm_x"] = jnp.ones((cfg.d_model,), cfg.dt)
+        p["xattn"] = init_attention(cfg, ks[2], cross=True)
+    return p
+
+
+def _block_axes(cfg: ModelConfig) -> dict:
+    if cfg.block_pattern == "rwkv6":
+        return {
+            "norm1": (None,),
+            "tmix": rwkv6_tmix_axes(),
+            "norm2": (None,),
+            "cmix": rwkv6_cmix_axes(),
+        }
+    a = {
+        "norm1": (None,),
+        "attn": attention_axes(cfg),
+        "norm2": (None,),
+    }
+    if cfg.moe is not None:
+        a["moe"] = moe_axes(cfg)
+    else:
+        a["mlp"] = mlp_axes(cfg)
+    if cfg.is_encdec:
+        a["norm_x"] = (None,)
+        a["xattn"] = attention_axes(cfg, cross=True)
+    return a
+
+
+def _init_griffin_group(cfg: ModelConfig, key) -> dict:
+    """One (rec, rec, attn) griffin super-block."""
+    ks = jax.random.split(key, 6)
+    return {
+        "rec": [
+            {
+                "norm1": jnp.ones((cfg.d_model,), cfg.dt),
+                "rg": init_rglru_block(cfg, ks[i]),
+                "norm2": jnp.ones((cfg.d_model,), cfg.dt),
+                "mlp": init_mlp(cfg, ks[i + 2]),
+            }
+            for i in range(2)
+        ],
+        "attn": {
+            "norm1": jnp.ones((cfg.d_model,), cfg.dt),
+            "attn": init_attention(cfg, ks[4]),
+            "norm2": jnp.ones((cfg.d_model,), cfg.dt),
+            "mlp": init_mlp(cfg, ks[5]),
+        },
+    }
+
+
+def _griffin_group_axes(cfg: ModelConfig) -> dict:
+    rec = {
+        "norm1": (None,),
+        "rg": rglru_block_axes(),
+        "norm2": (None,),
+        "mlp": mlp_axes(cfg),
+    }
+    return {
+        "rec": [rec, rec],
+        "attn": {
+            "norm1": (None,),
+            "attn": attention_axes(cfg),
+            "norm2": (None,),
+            "mlp": mlp_axes(cfg),
+        },
+    }
+
+
+def _rec_tail_axes(cfg: ModelConfig) -> dict:
+    return {
+        "norm1": (None,),
+        "rg": rglru_block_axes(),
+        "norm2": (None,),
+        "mlp": mlp_axes(cfg),
+    }
+
+
+def _stacked(init_fn, key, n: int):
+    """vmap an init over layer keys -> stacked (n, ...) leaves."""
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def _stack_axes(axes_tree):
+    """Prepend the 'layers' logical axis to every leaf's axes tuple."""
+    return jax.tree.map(
+        lambda ax: ("layers", *ax),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    k_emb, k_layers, k_head, k_enc, k_tail = jax.random.split(key, 5)
+    params: dict[str, Any] = {
+        "embed": dense_init(k_emb, (cfg.vocab_size, cfg.d_model), cfg.dt, in_axis=1),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, (cfg.d_model, cfg.vocab_size), cfg.dt)
+
+    if cfg.block_pattern == "griffin":
+        n_groups = cfg.n_layers // 3
+        n_tail = cfg.n_layers - 3 * n_groups
+        params["groups"] = _stacked(lambda k: _init_griffin_group(cfg, k), k_layers, n_groups)
+        if n_tail:
+            params["tail"] = _stacked(
+                lambda k: {
+                    "norm1": jnp.ones((cfg.d_model,), cfg.dt),
+                    "rg": init_rglru_block(cfg, jax.random.split(k, 2)[0]),
+                    "norm2": jnp.ones((cfg.d_model,), cfg.dt),
+                    "mlp": init_mlp(cfg, jax.random.split(k, 2)[1]),
+                },
+                k_tail,
+                n_tail,
+            )
+    else:
+        params["layers"] = _stacked(lambda k: _init_block(cfg, k), k_layers, cfg.n_layers)
+
+    if cfg.is_encdec:
+        enc_cfg = cfg.with_(use_qk_norm=False)
+        params["enc_layers"] = _stacked(
+            lambda k: {
+                "norm1": jnp.ones((cfg.d_model,), cfg.dt),
+                "attn": init_attention(enc_cfg, k),
+                "norm2": jnp.ones((cfg.d_model,), cfg.dt),
+                "mlp": init_mlp(enc_cfg, jax.random.fold_in(k, 1)),
+            },
+            k_enc,
+            cfg.encoder.n_layers,
+        )
+        params["enc_norm"] = jnp.ones((cfg.d_model,), cfg.dt)
+    return params
+
+
+def param_axes(cfg: ModelConfig) -> dict:
+    axes: dict[str, Any] = {
+        "embed": ("vocab", "embed"),
+        "final_norm": (None,),
+    }
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = ("embed", "vocab")
+    if cfg.block_pattern == "griffin":
+        axes["groups"] = _stack_axes(_griffin_group_axes(cfg))
+        if cfg.n_layers % 3:
+            axes["tail"] = _stack_axes(_rec_tail_axes(cfg))
+    else:
+        axes["layers"] = _stack_axes(_block_axes(cfg))
+    if cfg.is_encdec:
+        axes["enc_layers"] = _stack_axes(
+            {
+                "norm1": (None,),
+                "attn": attention_axes(cfg),
+                "norm2": (None,),
+                "mlp": mlp_axes(cfg),
+            }
+        )
+        axes["enc_norm"] = (None,)
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# backward-dtype barrier
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def _grad_to_bf16(x):
+    """Identity whose cotangent is cast to bf16 — stops the f32 loss
+    cotangent from promoting the whole backward pass to f32."""
+    return x
+
+
+def _gb_fwd(x):
+    return x, None
+
+
+def _gb_bwd(_, g):
+    return (g.astype(jnp.bfloat16),)
+
+
+_grad_to_bf16.defvjp(_gb_fwd, _gb_bwd)
+
+
+# ---------------------------------------------------------------------------
+# remat policy
+# ---------------------------------------------------------------------------
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "minimal":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _block_apply_full(cfg, p, x, positions, enc_out=None):
+    """One block, full sequence. Returns (x, aux_loss, serve_state)."""
+    aux = 0.0
+    state: dict[str, Any] = {}
+    if cfg.block_pattern == "rwkv6":
+        h, tm_state = rwkv6_tmix(p["tmix"], rms_norm_cfg(x, p["norm1"], cfg), cfg)
+        x = x + h
+        h, cm_state = rwkv6_cmix(p["cmix"], rms_norm_cfg(x, p["norm2"], cfg), cfg)
+        x = x + h
+        state = {"tmix": tm_state, "cmix": cm_state}
+        return x, aux, state
+    # attention block. Under sequence parallelism the residual stream and
+    # the norms live T-sharded over the model axis; the all-gather /
+    # reduce-scatter pairs that bracket attention and MLP are inserted by
+    # GSPMD from the sharding constraints (identity ops mathematically).
+    sp = cfg.seq_parallel
+    if sp:
+        x = constrain(x, ("batch", "seq_sp", None))
+    h_in = rms_norm_cfg(x, p["norm1"], cfg)
+    if sp:
+        h_in = constrain(h_in, ("batch", None, None))     # gather T
+    att = attention_full(p["attn"], h_in, cfg, positions, window=cfg.attn_window)
+    if sp:
+        att = constrain(att, ("batch", "seq_sp", None))   # reduce-scatter
+    x = x + att
+    if cfg.is_encdec and enc_out is not None:
+        xh = rms_norm_cfg(x, p["norm_x"], cfg)
+        if sp:
+            xh = constrain(xh, ("batch", None, None))
+        kv = encode_cross_kv(p["xattn"], enc_out, cfg)
+        xo = attention_cross(p["xattn"], xh, kv, cfg)
+        x = x + (constrain(xo, ("batch", "seq_sp", None)) if sp else xo)
+    h2 = rms_norm_cfg(x, p["norm2"], cfg)
+    if sp:
+        h2 = constrain(h2, ("batch", None, None))
+    if cfg.moe is not None:
+        mo, aux = moe_apply(p["moe"], h2, cfg)
+        if sp:
+            mo = constrain(mo, ("batch", "seq_sp", None))
+        x = x + mo
+    else:
+        mo = mlp_apply(p["mlp"], h2, cfg)
+        if sp:
+            mo = constrain(mo, ("batch", "seq_sp", None))
+        x = x + mo
+    return x, aux, state
+
+
+def _encode(params, frames, cfg: ModelConfig):
+    """Whisper encoder over precomputed frame embeddings (stub frontend)."""
+    x = frames.astype(cfg.dt)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+
+    def body(carry, lp):
+        h = carry
+        hin = rms_norm_cfg(h, lp["norm1"], cfg)
+        q, k, v = None, None, None
+        # bidirectional self-attention (no mask)
+        from .layers import _qkv, _sdpa
+
+        qq, kk, vv = _qkv(lp["attn"], hin, hin, cfg, positions, positions)
+        att = _sdpa(qq, kk, vv, None, cfg)
+        h = h + jnp.einsum("bthd,hde->bte", att, lp["attn"]["wo"])
+        h = h + mlp_apply(lp["mlp"], rms_norm_cfg(h, lp["norm2"], cfg), cfg)
+        return h, None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["enc_layers"])
+    return rms_norm_cfg(x, params["enc_norm"], cfg)
+
+
+def forward(params, tokens, cfg: ModelConfig, frames=None):
+    """Full-sequence causal forward -> logits (B, T, V) in f32."""
+    b, t = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dt)
+    x = constrain(x, ("batch", None, None))
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None, :], (b, t))
+    enc_out = _encode(params, frames, cfg) if cfg.is_encdec else None
+
+    aux_total = jnp.zeros((), jnp.float32)
+    if cfg.block_pattern == "griffin":
+        def gbody(carry, gp):
+            h, aux = carry
+            for rp in gp["rec"]:
+                r, _ = rglru_block(rp["rg"], rms_norm_cfg(h, rp["norm1"], cfg), cfg)
+                h = h + r
+                h = h + mlp_apply(rp["mlp"], rms_norm_cfg(h, rp["norm2"], cfg), cfg)
+            ap = gp["attn"]
+            h = h + attention_full(
+                ap["attn"], rms_norm_cfg(h, ap["norm1"], cfg), cfg, positions,
+                window=cfg.attn_window,
+            )
+            h = h + mlp_apply(ap["mlp"], rms_norm_cfg(h, ap["norm2"], cfg), cfg)
+            return (h, aux), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            _maybe_remat(gbody, cfg), (x, aux_total), params["groups"]
+        )
+        if "tail" in params:
+            def tbody(carry, rp):
+                h = carry
+                r, _ = rglru_block(rp["rg"], rms_norm_cfg(h, rp["norm1"], cfg), cfg)
+                h = h + r
+                h = h + mlp_apply(rp["mlp"], rms_norm_cfg(h, rp["norm2"], cfg), cfg)
+                return h, None
+
+            x, _ = jax.lax.scan(_maybe_remat(tbody, cfg), x, params["tail"])
+    else:
+        def body(carry, lp):
+            h, aux = carry
+            h, a, _ = _block_apply_full(cfg, lp, h, positions, enc_out)
+            return (h, aux + a), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            _maybe_remat(body, cfg), (x, aux_total), params["layers"]
+        )
+
+    if cfg.seq_parallel:
+        x = constrain(x, ("batch", None, None))
+    if cfg.bwd_bf16:
+        x = _grad_to_bf16(x)
+    x = rms_norm_cfg(x, params["final_norm"], cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("btd,dv->btv", x, head).astype(jnp.float32)
+    return constrain(logits, ("batch", None, "vocab")), aux_total
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    """Cross-entropy LM loss. batch: {"tokens","labels"[, "frames"]}."""
+    logits, aux = forward(params, batch["tokens"], cfg, batch.get("frames"))
+    labels = batch["labels"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    return nll + aux, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: state init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_serve_state(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    """Zero-initialized decode state (shapes define the dry-run specs)."""
+    hd, nkv = cfg.dhead, cfg.n_kv_heads
+    d = cfg.d_model
+    h = d // cfg.rwkv_head_size
+
+    def kv(length):
+        return {
+            "k": jnp.zeros((batch, length, nkv, hd), cfg.dt),
+            "v": jnp.zeros((batch, length, nkv, hd), cfg.dt),
+        }
+
+    if cfg.block_pattern == "rwkv6":
+        return {
+            "layers": {
+                "tmix": {
+                    "s": jnp.zeros((cfg.n_layers, batch, h, cfg.rwkv_head_size, cfg.rwkv_head_size), jnp.float32),
+                    "x_prev": jnp.zeros((cfg.n_layers, batch, d), cfg.dt),
+                },
+                "cmix": {"x_prev": jnp.zeros((cfg.n_layers, batch, d), cfg.dt)},
+            }
+        }
+    if cfg.block_pattern == "griffin":
+        n_groups = cfg.n_layers // 3
+        n_tail = cfg.n_layers - 3 * n_groups
+        win = min(cfg.attn_window or cache_len, cache_len)
+        st = {
+            "groups": {
+                "rec": [
+                    {
+                        "h": jnp.zeros((n_groups, batch, d), jnp.float32),
+                        "conv": jnp.zeros((n_groups, batch, cfg.conv1d_width - 1, d), cfg.dt),
+                    }
+                    for _ in range(2)
+                ],
+                "attn": jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (n_groups, *x.shape)), kv(win)
+                ),
+            }
+        }
+        if n_tail:
+            st["tail"] = {
+                "h": jnp.zeros((n_tail, batch, d), jnp.float32),
+                "conv": jnp.zeros((n_tail, batch, cfg.conv1d_width - 1, d), cfg.dt),
+            }
+        return st
+    state = {
+        "layers": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers, *x.shape)), kv(cache_len)
+        )
+    }
+    if cfg.is_encdec:
+        state["cross_kv"] = {
+            "k": jnp.zeros((cfg.n_layers, batch, cfg.encoder.n_frames, nkv, hd), cfg.dt),
+            "v": jnp.zeros((cfg.n_layers, batch, cfg.encoder.n_frames, nkv, hd), cfg.dt),
+        }
+    return state
+
+
+def serve_state_axes(cfg: ModelConfig, state) -> Any:
+    """Logical axes for every serve-state leaf: (layers, batch, ...) with
+    kv-head sharding where present."""
+
+    def leaf_axes(path_leaf):
+        x = path_leaf
+        if x.ndim == 5:  # (L, B, S, kv, hd) or rwkv s (L,B,H,hd,hd)
+            if x.shape[-1] == x.shape[-2]:
+                return ("layers", "batch", "heads", None, None)
+            return ("layers", "batch", None, "kv_heads", None)
+        if x.ndim == 4:
+            return ("layers", "batch", None, None)
+        if x.ndim == 3:
+            return ("layers", "batch", None)
+        return tuple([None] * x.ndim)
+
+    return jax.tree.map(leaf_axes, state)
+
+
+def decode_step(params, token, pos, state, cfg: ModelConfig):
+    """One-token decode. token: (B, 1) int32; pos: scalar int32 (current
+    position = number of tokens already in the state).
+
+    Returns (logits (B, V) f32, new_state)."""
+    x = params["embed"][token].astype(cfg.dt)
+
+    if cfg.block_pattern == "rwkv6":
+        ls = state["layers"]
+
+        def body(h, xs):
+            lp, tm, cm = xs
+            o, tm2 = rwkv6_tmix(lp["tmix"], rms_norm_cfg(h, lp["norm1"], cfg), cfg, tm)
+            h = h + o
+            o, cm2 = rwkv6_cmix(lp["cmix"], rms_norm_cfg(h, lp["norm2"], cfg), cfg, cm)
+            return h + o, (tm2, cm2)
+
+        x, (tm_new, cm_new) = jax.lax.scan(
+            body, x, (params["layers"], ls["tmix"], ls["cmix"])
+        )
+        new_state = {"layers": {"tmix": tm_new, "cmix": cm_new}}
+    elif cfg.block_pattern == "griffin":
+        gs = state["groups"]
+
+        def gbody(h, xs):
+            gp, st = xs
+            new_rec = []
+            for i in range(2):
+                rp, rst = gp["rec"][i], st["rec"][i]
+                o, rst2 = rglru_block(rp["rg"], rms_norm_cfg(h, rp["norm1"], cfg), cfg, rst)
+                h = h + o
+                h = h + mlp_apply(rp["mlp"], rms_norm_cfg(h, rp["norm2"], cfg), cfg)
+                new_rec.append(rst2)
+            ap = gp["attn"]
+            # local attention against the rolling window cache
+            o, new_kv = attention_decode(
+                ap["attn"], rms_norm_cfg(h, ap["norm1"], cfg),
+                st["attn"], pos, cfg, ring=True,
+            )
+            h = h + o
+            h = h + mlp_apply(ap["mlp"], rms_norm_cfg(h, ap["norm2"], cfg), cfg)
+            return h, {"rec": new_rec, "attn": new_kv}
+
+        x, gs_new = jax.lax.scan(gbody, x, (params["groups"], gs))
+        new_state = {"groups": gs_new}
+        if "tail" in params:
+            def tbody(h, xs):
+                rp, rst = xs
+                o, rst2 = rglru_block(rp["rg"], rms_norm_cfg(h, rp["norm1"], cfg), cfg, rst)
+                h = h + o
+                h = h + mlp_apply(rp["mlp"], rms_norm_cfg(h, rp["norm2"], cfg), cfg)
+                return h, rst2
+
+            x, tail_new = jax.lax.scan(tbody, x, (params["tail"], state["tail"]))
+            new_state["tail"] = tail_new
+    else:
+        def body(h, xs):
+            if cfg.is_encdec:
+                lp, kv, xkv = xs
+            else:
+                lp, kv = xs
+                xkv = None
+            o, kv2 = attention_decode(
+                lp["attn"], rms_norm_cfg(h, lp["norm1"], cfg), kv, pos, cfg,
+                window=cfg.attn_window,
+            )
+            h = h + o
+            if cfg.is_encdec:
+                h = h + attention_cross(
+                    lp["xattn"], rms_norm_cfg(h, lp["norm_x"], cfg), xkv, cfg
+                )
+            h2 = rms_norm_cfg(h, lp["norm2"], cfg)
+            if cfg.moe is not None:
+                mo, _ = moe_apply(lp["moe"], h2, cfg)
+                h = h + mo
+            else:
+                h = h + mlp_apply(lp["mlp"], h2, cfg)
+            return h, kv2
+
+        xs = (
+            (params["layers"], state["layers"], state["cross_kv"])
+            if cfg.is_encdec
+            else (params["layers"], state["layers"])
+        )
+        x, kv_new = jax.lax.scan(body, x, xs)
+        new_state = dict(state)
+        new_state["layers"] = kv_new
+
+    x = rms_norm_cfg(x, params["final_norm"], cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("btd,dv->btv", x, head).astype(jnp.float32)[:, 0, :]
+    return logits, new_state
+
+
+def prefill(params, tokens, cfg: ModelConfig, frames=None):
+    """Full forward that also materializes the serve state.
+
+    Returns (last-token logits (B, V), state). For attention families the
+    KV cache length equals the prompt length (the serve loop reallocates
+    or pre-pads as needed)."""
+    b, t = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dt)
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None, :], (b, t))
+    enc_out = _encode(params, frames, cfg) if cfg.is_encdec else None
+
+    if cfg.block_pattern == "rwkv6":
+        def body(h, lp):
+            o, tm = rwkv6_tmix(lp["tmix"], rms_norm_cfg(h, lp["norm1"], cfg), cfg)
+            h = h + o
+            o, cm = rwkv6_cmix(lp["cmix"], rms_norm_cfg(h, lp["norm2"], cfg), cfg)
+            return h + o, (tm, cm)
+
+        x, (tm, cm) = jax.lax.scan(_maybe_remat(body, cfg), x, params["layers"])
+        state = {"layers": {"tmix": tm, "cmix": cm}}
+    elif cfg.block_pattern == "griffin":
+        win = cfg.attn_window or t
+
+        def gbody(h, gp):
+            sts = {"rec": [], "attn": None}
+            for i in range(2):
+                rp = gp["rec"][i]
+                o, rst = rglru_block(rp["rg"], rms_norm_cfg(h, rp["norm1"], cfg), cfg)
+                h = h + o
+                h = h + mlp_apply(rp["mlp"], rms_norm_cfg(h, rp["norm2"], cfg), cfg)
+                sts["rec"].append(rst)
+            ap = gp["attn"]
+            hin = rms_norm_cfg(h, ap["norm1"], cfg)
+            from .layers import _qkv
+
+            q, k, v = _qkv(ap["attn"], hin, hin, cfg, positions, positions)
+            from .layers import self_attention
+
+            att = self_attention(q, k, v, cfg, window=cfg.attn_window)
+            h = h + jnp.einsum("bthd,hde->bte", att, ap["attn"]["wo"])
+            h = h + mlp_apply(ap["mlp"], rms_norm_cfg(h, ap["norm2"], cfg), cfg)
+            # Ring layout: slot j holds position p with p % win == j, so the
+            # decode path (write index pos % win) continues seamlessly.
+            if t >= win:
+                shift = t % win
+                sts["attn"] = {
+                    "k": jnp.roll(k[:, -win:], shift, axis=1),
+                    "v": jnp.roll(v[:, -win:], shift, axis=1),
+                }
+            else:  # short prompt: positions 0..t-1 live at slots 0..t-1
+                pad = ((0, 0), (0, win - t), (0, 0), (0, 0))
+                sts["attn"] = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+            return h, sts
+
+        x, gstates = jax.lax.scan(_maybe_remat(gbody, cfg), x, params["groups"])
+        state = {"groups": gstates}
+        if "tail" in params:
+            def tbody(h, rp):
+                o, rst = rglru_block(rp["rg"], rms_norm_cfg(h, rp["norm1"], cfg), cfg)
+                h = h + o
+                h = h + mlp_apply(rp["mlp"], rms_norm_cfg(h, rp["norm2"], cfg), cfg)
+                return h, rst
+
+            x, tstates = jax.lax.scan(_maybe_remat(tbody, cfg), x, params["tail"])
+            state["tail"] = tstates
+    else:
+        def body(h, lp):
+            hin = rms_norm_cfg(h, lp["norm1"], cfg)
+            from .layers import _qkv, self_attention
+
+            q, k, v = _qkv(lp["attn"], hin, hin, cfg, positions, positions)
+            att = self_attention(q, k, v, cfg, window=cfg.attn_window)
+            h = h + jnp.einsum("bthd,hde->bte", att, lp["attn"]["wo"])
+            xkv = None
+            if cfg.is_encdec:
+                xh = rms_norm_cfg(h, lp["norm_x"], cfg)
+                xkv = encode_cross_kv(lp["xattn"], enc_out, cfg)
+                h = h + attention_cross(lp["xattn"], xh, xkv, cfg)
+            h2 = rms_norm_cfg(h, lp["norm2"], cfg)
+            if cfg.moe is not None:
+                mo, _ = moe_apply(lp["moe"], h2, cfg)
+                h = h + mo
+            else:
+                h = h + mlp_apply(lp["mlp"], h2, cfg)
+            out_state = {"k": k, "v": v}
+            if cfg.is_encdec:
+                return h, (out_state, xkv)
+            return h, out_state
+
+        x, scanned = jax.lax.scan(_maybe_remat(body, cfg), x, params["layers"])
+        if cfg.is_encdec:
+            kv, xkv = scanned
+            state = {"layers": kv, "cross_kv": xkv}
+        else:
+            state = {"layers": scanned}
+
+    x = rms_norm_cfg(x, params["final_norm"], cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", x[:, -1, :], head).astype(jnp.float32)
+    return logits, state

@@ -1,0 +1,131 @@
+"""Logical-axis sharding rules (MaxText-style) for single- and multi-pod
+meshes.
+
+Parameters and activations are annotated with tuples of *logical* axis
+names; ``logical_to_spec`` resolves them to ``PartitionSpec`` against a
+rule table, dropping mesh axes that do not divide the concrete dimension
+(e.g. whisper-tiny's 6 heads on a 16-way model axis fall back to
+replication instead of failing to lower).
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axes (in priority order), per mesh flavor
+RULES_SINGLE_POD: dict[str, tuple[str, ...]] = {
+    "batch": ("data",),
+    "seq": (),
+    "embed": ("data",),          # FSDP: params+optimizer sharded over data
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "expert_mlp": (),
+    "expert_cap": (),
+    "layers": (),
+    "conv": (),
+    "frames": (),
+    "state": ("model",),
+    "seq_sp": ("model",),   # Megatron-style sequence parallelism
+}
+
+RULES_MULTI_POD: dict[str, tuple[str, ...]] = {
+    **RULES_SINGLE_POD,
+    "batch": ("pod", "data"),
+    "embed": ("pod", "data"),    # FSDP over the full DP extent
+}
+
+
+def rules_for(mesh: Mesh) -> dict[str, tuple[str, ...]]:
+    return RULES_MULTI_POD if "pod" in mesh.axis_names else RULES_SINGLE_POD
+
+
+def logical_to_spec(
+    logical: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: Optional[Mapping[str, tuple[str, ...]]] = None,
+) -> P:
+    """Resolve logical axis names to a PartitionSpec, checking divisibility."""
+    rules = rules or rules_for(mesh)
+    used: set[str] = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        if name is None:
+            out.append(None)
+            continue
+        axes = []
+        extent = 1
+        for mesh_axis in rules.get(name, ()):
+            if mesh_axis in used:
+                continue
+            size = mesh.shape[mesh_axis]
+            if dim % (extent * size) == 0:
+                axes.append(mesh_axis)
+                extent *= size
+        for a in axes:
+            used.add(a)
+        if not axes:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(tuple(axes))
+    return P(*out)
+
+
+def named_sharding(
+    logical: Sequence[Optional[str]], shape: Sequence[int], mesh: Mesh
+) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(logical, shape, mesh))
+
+
+def tree_shardings(logical_tree, shape_tree, mesh: Mesh):
+    """Map parallel pytrees of logical-axis tuples and shapes to
+    NamedShardings."""
+    return jax.tree.map(
+        lambda log, shp: named_sharding(log, shp, mesh),
+        logical_tree,
+        shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        ),
+    )
+
+
+_ACTIVE_MESH: list[Optional[Mesh]] = [None]
+
+
+class activate_mesh:
+    """Explicit ambient-mesh scope for ``constrain`` (no reliance on
+    deprecated thread-resource introspection). The train/serve builders
+    activate the production mesh around tracing; tests that never
+    activate a mesh get no-op constraints."""
+
+    def __init__(self, mesh: Optional[Mesh]):
+        self.mesh = mesh
+
+    def __enter__(self):
+        self.prev = _ACTIVE_MESH[0]
+        _ACTIVE_MESH[0] = self.mesh
+        return self.mesh
+
+    def __exit__(self, *exc):
+        _ACTIVE_MESH[0] = self.prev
+        return False
+
+
+def constrain(x, logical: Sequence[Optional[str]], mesh: Optional[Mesh] = None):
+    """with_sharding_constraint via logical names under the active mesh."""
+    mesh = mesh or _ACTIVE_MESH[0]
+    if mesh is None or mesh.empty:
+        return x
+    spec = logical_to_spec(logical, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

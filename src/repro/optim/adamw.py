@@ -1,0 +1,92 @@
+"""AdamW with f32 master weights over bf16 compute params.
+
+Functional (no optax dependency): ``adamw_init`` builds the state pytree
+(sharded like the params via the same logical axes — FSDP shards the
+optimizer moments too), ``adamw_update`` applies one step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    #: cosine decay horizon; 0 disables scheduling (constant lr after warmup)
+    decay_steps: int = 10_000
+
+
+class OptState(NamedTuple):
+    step: jax.Array          # scalar int32
+    mu: Any                  # first moment (f32, like params)
+    nu: Any                  # second moment (f32)
+    master: Any              # f32 master copy of params
+
+
+def adamw_init(params) -> OptState:
+    # The eager add forces distinct buffers: jnp.zeros of identical
+    # shape/dtype can return a shared cached constant, and two aliased
+    # leaves inside one donated TrainState trip XLA's double-donation check.
+    f32 = lambda t: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32) + 0.0, t)
+    master = jax.tree.map(lambda x: x.astype(jnp.float32) + 0.0, params)
+    return OptState(jnp.zeros((), jnp.int32), f32(params), f32(params), master)
+
+
+def opt_state_axes(axes_tree) -> OptState:
+    """Logical axes for the optimizer state (moments/master mirror params)."""
+    return OptState(step=(), mu=axes_tree, nu=axes_tree, master=axes_tree)
+
+
+def _schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1.0) / max(1, cfg.warmup_steps))
+    if cfg.decay_steps > 0:
+        frac = jnp.clip(step / cfg.decay_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return cfg.lr * warm * (0.1 + 0.9 * cos)
+    return cfg.lr * warm
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def adamw_update(cfg: AdamWConfig, grads, state: OptState, params):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = _schedule(cfg, state.step)
+    b1, b2 = cfg.b1, cfg.b2
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+
+    def upd(w, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        return w - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * w)
+
+    master = jax.tree.map(upd, state.master, mu, nu)
+    new_params = jax.tree.map(
+        lambda w, p: w.astype(p.dtype), master, params
+    )
+    return new_params, OptState(step, mu, nu, master), {
+        "grad_norm": gnorm,
+        "lr": lr,
+    }

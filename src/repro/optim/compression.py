@@ -1,0 +1,58 @@
+"""Error-feedback int8 gradient compression (distributed-optimization
+trick for the DP all-reduce path).
+
+Gradients are quantized to int8 with a per-tensor scale before the
+data-parallel reduction and dequantized after; the quantization residual
+is carried in an error-feedback buffer so the compression bias vanishes
+over steps (Seide et al. / EF-SGD lineage). 4x reduction of DP all-reduce
+bytes at the cost of one extra buffer per parameter.
+
+Honest scope note: under XLA SPMD the gradient reductions happen as
+partial-sum all-reduces *inside* the backward dots, before this hook
+sees the gradients — quantizing here compresses what a parameter-server
+or explicit shard_map/psum reduction path would move, not GSPMD's
+fused wgrad all-reduces. Wiring EF-int8 into the actual reduction
+requires a shard_map custom all-reduce (documented follow-up in
+EXPERIMENTS.md §Perf); the optimizer-side machinery (error feedback,
+bounded quantization error, convergence) is implemented and tested
+here.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    error: Any  # per-parameter f32 residual buffers
+
+
+def compression_init(params) -> CompressionState:
+    return CompressionState(
+        error=jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    )
+
+
+def _quantize(x):
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_decompress(grads, state: CompressionState):
+    """Apply EF-int8 to every gradient leaf. Returns (grads', new_state)."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = _quantize(g32)
+        deq = q.astype(jnp.float32) * scale
+        return deq, g32 - deq
+
+    pairs = jax.tree.map(one, grads, state.error)
+    new_grads = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return new_grads, CompressionState(error=new_err)

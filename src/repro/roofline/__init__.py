@@ -1,0 +1,13 @@
+"""Roofline analysis: jaxpr FLOP walker + post-SPMD HLO byte/collective
+analysis + v5e roofline terms."""
+
+from .jaxpr_flops import FlopCount, count_fn_flops, count_jaxpr
+from .hlo_analysis import HloStats, analyze_hlo, parse_hlo
+from .terms import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, RooflineTerms, model_flops_for
+
+__all__ = [
+    "FlopCount", "count_fn_flops", "count_jaxpr",
+    "HloStats", "analyze_hlo", "parse_hlo",
+    "RooflineTerms", "model_flops_for",
+    "PEAK_FLOPS_BF16", "HBM_BW", "ICI_BW",
+]

@@ -1,0 +1,85 @@
+"""Traffic attribution: where do the HBM bytes / collective bytes go?
+
+Used by the §Perf hillclimb to find the dominant contributors before
+forming a hypothesis. Reuses the hlo_analysis parser; reports per-opcode
+totals and the top individual instructions (with their execution
+multipliers) under the fusion-idealized model.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+from .hlo_analysis import (
+    COLLECTIVES,
+    _IDEAL_COUNTED,
+    _SKIP_MEMORY_OPS,
+    _multipliers,
+    _operand_names,
+    _shape_bytes,
+    fusion_traffic,
+    parse_hlo,
+)
+
+
+def memory_breakdown(text: str, top_n: int = 15) -> dict:
+    comps = parse_hlo(text)
+    mult = _multipliers(comps)
+    by_opcode: dict[str, float] = defaultdict(float)
+    items: list[tuple[float, str]] = []
+    for comp in comps.values():
+        m = mult.get(comp.name)
+        if m is None:
+            continue
+        sym = comp.symbols()
+        for ins in comp.instructions:
+            op_names = [o for o in _operand_names(ins) if o in sym and o != ins.name]
+            operands = [sym[o] for o in op_names]
+            bytes_ = 0.0
+            if ins.opcode in COLLECTIVES:
+                ob = sum(_shape_bytes(t) for t in operands) or ins.out_bytes
+                bytes_ = m * (ins.out_bytes + ob)
+            elif ins.opcode in _SKIP_MEMORY_OPS:
+                continue
+            elif ins.opcode in ("dynamic-slice", "gather"):
+                bytes_ = m * 2 * ins.out_bytes
+            elif ins.opcode in ("dynamic-update-slice", "scatter"):
+                upd = _shape_bytes(operands[1]) if len(operands) > 1 else ins.out_bytes
+                bytes_ = m * 2 * upd
+            elif ins.opcode == "fusion":
+                bytes_ = m * fusion_traffic(comps, ins, operands)
+            elif ins.opcode in _IDEAL_COUNTED:
+                bytes_ = m * (sum(_shape_bytes(t) for t in operands) + ins.out_bytes)
+            else:
+                continue
+            by_opcode[ins.opcode] += bytes_
+            items.append((bytes_, f"{comp.name}/{ins.name} x{m:.0f} {ins.opcode} {ins.type_str[:60]}"))
+    items.sort(reverse=True)
+    return {
+        "by_opcode": dict(sorted(by_opcode.items(), key=lambda kv: -kv[1])),
+        "top": items[:top_n],
+        "total": sum(by_opcode.values()),
+    }
+
+
+def collective_breakdown(text: str, top_n: int = 12) -> dict:
+    comps = parse_hlo(text)
+    mult = _multipliers(comps)
+    items: list[tuple[float, str]] = []
+    for comp in comps.values():
+        m = mult.get(comp.name)
+        if m is None:
+            continue
+        sym = comp.symbols()
+        for ins in comp.instructions:
+            if ins.opcode not in COLLECTIVES:
+                continue
+            op_names = [o for o in _operand_names(ins) if o in sym and o != ins.name]
+            ob = sum(_shape_bytes(sym[o]) for o in op_names) or ins.out_bytes
+            meta = re.search(r'op_name="([^"]+)"', ins.body)
+            items.append(
+                (m * ob, f"{ins.opcode} x{m:.0f} {ins.type_str[:40]} :: {(meta.group(1) if meta else '')[:80]}")
+            )
+    items.sort(reverse=True)
+    return {"top": items[:top_n], "total": sum(b for b, _ in items)}

@@ -1,0 +1,376 @@
+"""Post-SPMD HLO text analysis: per-device memory traffic, collective
+bytes, and dot FLOPs — with while-loop bodies scaled by their trip
+counts (which ``compiled.cost_analysis()`` does not do).
+
+The compiled module is the per-device program, so every byte count here
+is already per-chip. Computations are parsed into symbol tables
+(instruction -> shape) so collective/dot operand shapes resolve even
+though HLO text prints operand names only.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*.*\{\s*$")
+_PARAM_RE = re.compile(r"([\w.\-]+):\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[\d,]*\})?))")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string; tuples sum their elements."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            n = int(np.prod([int(d) for d in dims.split(",") if d]))
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[list[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",") if d] if dims else []
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    type_str: str
+    opcode: str
+    body: str          # full RHS text
+
+    @property
+    def out_bytes(self) -> int:
+        return _shape_bytes(self.type_str)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    params: dict          # name -> type str
+    instructions: list
+
+    def symbols(self) -> dict:
+        sym = dict(self.params)
+        for ins in self.instructions:
+            sym[ins.name] = ins.type_str
+        return sym
+
+
+_OPCODE_RE = re.compile(r"^((?:\([^)]*\)|\w+\[[\d,]*\](?:\{[\d,:TS()]*\})?|tuple|token)\s+)?([\w\-]+)\(")
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s or s.startswith("//"):
+            continue
+        hdr = _COMP_HDR_RE.match(s)
+        if hdr and s.endswith("{"):
+            params = {}
+            for pname, ptype in _PARAM_RE.findall(hdr.group(2)):
+                params[pname] = ptype
+            cur = Computation(
+                name=hdr.group(1),
+                is_entry=s.startswith("ENTRY"),
+                params=params,
+                instructions=[],
+            )
+            comps[cur.name] = cur
+            continue
+        if s == "}" or s == "})":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(s)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # rhs = "TYPE opcode(...)..." ; find the opcode
+        om = re.match(r"^((?:\([^)]*\))|(?:[\w]+\[[\d,]*\](?:\{[^}]*\})?))\s+([\w\-]+)\(", rhs)
+        if om:
+            type_str, opcode = om.group(1), om.group(2)
+        else:
+            om2 = re.match(r"^([\w]+\[[\d,]*\](?:\{[^}]*\})?)\s+(\S+)", rhs)
+            if om2:
+                type_str, opcode = om2.group(1), om2.group(2).split("(")[0]
+            else:
+                type_str, opcode = rhs, "unknown"
+        cur.instructions.append(Instruction(name, type_str, opcode, rhs))
+    return comps
+
+
+def _while_links(comps: dict[str, Computation]) -> list[tuple[str, str, str]]:
+    """(computation containing the while, body comp, condition comp)."""
+    out = []
+    for comp in comps.values():
+        for ins in comp.instructions:
+            if ins.opcode == "while":
+                b = re.search(r"body=%?([\w.\-]+)", ins.body)
+                c = re.search(r"condition=%?([\w.\-]+)", ins.body)
+                if b and c:
+                    out.append((comp.name, b.group(1), c.group(1)))
+    return out
+
+
+def _trip_count(cond: Computation) -> int:
+    """Heuristic trip count: largest s32 constant in the while condition
+    (scan lowers to `iter < length`). Falls back to 1."""
+    best = 1
+    for ins in cond.instructions:
+        m = re.search(r"s32\[\]\s+constant\((\d+)\)", ins.body) or re.search(
+            r"constant\((\d+)\)", ins.body
+        )
+        if m and ins.type_str.startswith("s32"):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _multipliers(comps: dict[str, Computation]) -> dict[str, float]:
+    """Execution multiplier per computation (nested whiles multiply)."""
+    mult: dict[str, float] = {}
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return {c: 1.0 for c in comps}
+    links = _while_links(comps)
+    children: dict[str, list[tuple[str, int]]] = {}
+    for host, body, cond in links:
+        trips = _trip_count(comps[cond]) if cond in comps else 1
+        children.setdefault(host, []).append((body, trips))
+        children.setdefault(host, []).append((cond, trips + 1))
+
+    def visit(name: str, m: float):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for child, trips in children.get(name, []):
+            visit(child, m * trips)
+
+    visit(entry.name, 1.0)
+    return mult
+
+
+_SKIP_MEMORY_OPS = {
+    "tuple",
+    "get-tuple-element",
+    "parameter",
+    "constant",
+    "bitcast",
+    "after-all",
+    "partition-id",
+    "replica-id",
+    "while",       # body counted separately
+    "conditional",
+}
+
+
+@dataclasses.dataclass
+class HloStats:
+    memory_bytes: float = 0.0          # raw per-op traffic (upper bound)
+    memory_bytes_ideal: float = 0.0    # TPU-fusion-idealized traffic
+    collective_bytes: dict = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in COLLECTIVES}
+    )
+    dot_flops: float = 0.0
+    n_collectives: int = 0
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+# Ops that still materialize HBM traffic under TPU-grade fusion. The CPU
+# backend (whose optimized HLO we analyze) fuses far less than the TPU
+# backend, so counting every op's operands/outputs double-counts
+# score-sized attention tensors many times over. `memory_bytes` keeps
+# that raw upper bound; `memory_bytes_ideal` counts only materializing
+# ops — bare elementwise/layout ops are assumed fused into producers.
+_IDEAL_COUNTED = {
+    "dot",
+    "fusion",
+    "reduce",
+    "reduce-window",
+    "sort",
+    "concatenate",
+    "custom-call",
+    "select-and-scatter",
+    "convolution",
+    "cholesky",
+    "triangular-solve",
+}
+
+
+def _operand_names(ins: Instruction) -> list[str]:
+    """Operand instruction names (first parenthesized group only, so
+    attributes like body=%x / to_apply=%y are excluded)."""
+    m = re.search(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)", ins.body)
+    if not m:
+        return []
+    return _OPERAND_RE.findall(m.group(1))
+
+
+def _sliced_read_bytes(comps, comp_name: str) -> Optional[dict[int, float]]:
+    """For a fusion computation: bytes actually read per parameter index,
+    for parameters consumed ONLY through dynamic-slice/gather (a scan
+    body slicing one layer out of stacked weights reads the slice, not
+    the stack). Returns {param_idx: bytes} for such params, or None if
+    the computation is unknown."""
+    comp = comps.get(comp_name)
+    if comp is None:
+        return None
+    out: dict[int, float] = {}
+    # map parameter instruction name -> param index
+    pnames: dict[str, int] = {}
+    for ins in comp.instructions:
+        pm = re.match(r"parameter\((\d+)\)", ins.body.split(" ", 1)[-1]) or re.search(
+            r"parameter\((\d+)\)", ins.body
+        )
+        if pm:
+            pnames[ins.name] = int(pm.group(1))
+    sym = comp.symbols()
+    for pname, pidx in pnames.items():
+        consumers = [
+            i
+            for i in comp.instructions
+            if i.name != pname and re.search(rf"%{re.escape(pname)}\b", i.body)
+        ]
+        if not consumers:
+            continue
+        if all(c.opcode in ("dynamic-slice", "gather") for c in consumers):
+            out[pidx] = float(sum(c.out_bytes for c in consumers))
+        elif all(c.opcode == "dynamic-update-slice" for c in consumers) and all(
+            _operand_names(c) and _operand_names(c)[0] == pname for c in consumers
+        ):
+            # param is the in-place update target: traffic ~ update size
+            upd = 0.0
+            for c in consumers:
+                ops = _operand_names(c)
+                if len(ops) > 1 and ops[1] in sym:
+                    upd += _shape_bytes(sym[ops[1]])
+            out[pidx] = upd
+    return out
+
+
+def fusion_traffic(comps, ins: Instruction, operands: list[str]) -> float:
+    """HBM traffic of one fusion call (unmultiplied).
+
+    Two special patterns matter enormously inside scan bodies:
+      * slice-read: a parameter consumed only via dynamic-slice/gather
+        (layer weights sliced from the stacked scan array) reads the
+        slice, not the stack;
+      * in-place accumulation: a fusion containing a dynamic-update-slice
+        whose output aliases a same-shaped operand (scan residual
+        stacking, KV-cache writes) writes the update region, not the
+        whole buffer.
+    """
+    cm = re.search(r"calls=%?([\w.\-]+)", ins.body)
+    callee = cm.group(1) if cm else None
+    callee_comp = comps.get(callee) if callee else None
+    has_dus = bool(callee_comp) and any(
+        i.opcode == "dynamic-update-slice" for i in callee_comp.instructions
+    )
+    if has_dus and any(
+        _shape_bytes(t) == ins.out_bytes and ins.out_bytes > 0 for t in operands
+    ):
+        others = [t for t in operands if _shape_bytes(t) != ins.out_bytes]
+        upd = sum(_shape_bytes(t) for t in others)
+        biggest = max((_shape_bytes(t) for t in others), default=0)
+        return float(upd + biggest)  # read sources + write update region
+    sliced = _sliced_read_bytes(comps, callee) if callee else None
+    in_bytes = 0.0
+    for idx, t in enumerate(operands):
+        if sliced is not None and idx in sliced:
+            in_bytes += sliced[idx]
+        else:
+            in_bytes += _shape_bytes(t)
+    return float(in_bytes + ins.out_bytes)
+
+
+def analyze_hlo(text: str) -> HloStats:
+    comps = parse_hlo(text)
+    mult = _multipliers(comps)
+    stats = HloStats()
+    for comp in comps.values():
+        m = mult.get(comp.name)
+        if m is None:
+            # not reachable from entry through whiles: a fusion body or
+            # reduction lambda — its cost is accounted at the call site.
+            continue
+        sym = comp.symbols()
+        for ins in comp.instructions:
+            op_names = [o for o in _operand_names(ins) if o in sym and o != ins.name]
+            operands = [sym[o] for o in op_names]
+            if ins.opcode in COLLECTIVES:
+                ob = sum(_shape_bytes(t) for t in operands) or ins.out_bytes
+                stats.collective_bytes[ins.opcode] += m * ob
+                stats.n_collectives += 1
+                stats.memory_bytes += m * (ins.out_bytes + ob)
+                stats.memory_bytes_ideal += m * (ins.out_bytes + ob)
+                continue
+            if ins.opcode in _SKIP_MEMORY_OPS:
+                continue
+            if ins.opcode in ("dynamic-slice", "gather"):
+                # reads only the slice it produces (plus indices ~ 0)
+                stats.memory_bytes += m * 2 * ins.out_bytes
+                stats.memory_bytes_ideal += m * 2 * ins.out_bytes
+                continue
+            if ins.opcode in ("dynamic-update-slice", "scatter"):
+                # in-place update: traffic ~ 2x the update operand
+                upd = _shape_bytes(operands[1]) if len(operands) > 1 else ins.out_bytes
+                stats.memory_bytes += m * 2 * upd
+                stats.memory_bytes_ideal += m * 2 * upd
+                continue
+            if ins.opcode == "fusion":
+                bytes_ = m * fusion_traffic(comps, ins, operands)
+                stats.memory_bytes += bytes_
+                stats.memory_bytes_ideal += bytes_
+                continue
+            in_bytes = sum(_shape_bytes(t) for t in operands)
+            stats.memory_bytes += m * (in_bytes + ins.out_bytes)
+            if ins.opcode in _IDEAL_COUNTED:
+                stats.memory_bytes_ideal += m * (in_bytes + ins.out_bytes)
+            if ins.opcode == "dot":
+                out_dims = _shape_dims(ins.type_str) or []
+                lhs_t = operands[0] if operands else None
+                lc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.body)
+                if lhs_t and lc:
+                    lhs_dims = _shape_dims(lhs_t) or []
+                    contract = int(
+                        np.prod([lhs_dims[int(i)] for i in lc.group(1).split(",") if i], initial=1)
+                    )
+                    out_n = int(np.prod(out_dims, initial=1))
+                    stats.dot_flops += m * 2.0 * out_n * contract
+    return stats

@@ -1,0 +1,135 @@
+"""Analytic FLOP counting by walking the jaxpr.
+
+Why not ``compiled.cost_analysis()``: XLA's cost analysis counts a
+``while`` body ONCE regardless of trip count, so any scan-over-layers or
+scan-over-time model is undercounted by ~n_layers x (verified in
+EXPERIMENTS.md §Roofline methodology). The jaxpr walker recurses into
+``scan`` with its static ``length``, into ``pjit``/``remat`` calls, and
+counts ``dot_general`` exactly — including the remat-induced recompute
+visible in the backward jaxpr.
+
+Matmul FLOPs are the standard 2*M*N*K; elementwise ops are tallied
+separately (1 flop/output element) so the dot count stays clean.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax._src import core as jcore
+
+
+@dataclasses.dataclass
+class FlopCount:
+    dot_flops: float = 0.0
+    elementwise_flops: float = 0.0
+
+    @property
+    def total(self) -> float:
+        return self.dot_flops + self.elementwise_flops
+
+    def scaled(self, m: float) -> "FlopCount":
+        return FlopCount(self.dot_flops * m, self.elementwise_flops * m)
+
+    def __iadd__(self, o: "FlopCount"):
+        self.dot_flops += o.dot_flops
+        self.elementwise_flops += o.elementwise_flops
+        return self
+
+
+def _dot_flops(eqn) -> float:
+    dn = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dn
+    lhs = eqn.invars[0].aval
+    batch = float(np.prod([lhs.shape[i] for i in lb], initial=1.0))
+    contract = float(np.prod([lhs.shape[i] for i in lc], initial=1.0))
+    m = float(
+        np.prod(
+            [s for i, s in enumerate(lhs.shape) if i not in lc and i not in lb],
+            initial=1.0,
+        )
+    )
+    rhs = eqn.invars[1].aval
+    n = float(
+        np.prod(
+            [s for i, s in enumerate(rhs.shape) if i not in rc and i not in rb],
+            initial=1.0,
+        )
+    )
+    return 2.0 * batch * m * n * contract
+
+
+_CALL_JAXPR_PARAMS = ("jaxpr", "call_jaxpr", "fun_jaxpr")
+_ZERO_COST = {
+    "broadcast_in_dim",
+    "reshape",
+    "transpose",
+    "squeeze",
+    "slice",
+    "concatenate",
+    "convert_element_type",
+    "dynamic_slice",
+    "dynamic_update_slice",
+    "gather",
+    "scatter",
+    "scatter-add",
+    "iota",
+    "pad",
+    "rev",
+    "copy",
+    "stop_gradient",
+    "device_put",
+    "sharding_constraint",
+    "split",
+}
+
+
+def _out_elems(eqn) -> float:
+    return float(
+        sum(np.prod(v.aval.shape, initial=1.0) for v in eqn.outvars if hasattr(v.aval, "shape"))
+    )
+
+
+def count_jaxpr(jaxpr: jcore.Jaxpr) -> FlopCount:
+    fc = FlopCount()
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "dot_general":
+            fc.dot_flops += _dot_flops(eqn)
+        elif name == "scan":
+            inner = count_jaxpr(eqn.params["jaxpr"].jaxpr)
+            fc += inner.scaled(float(eqn.params["length"]))
+        elif name == "while":
+            # only used for unbounded loops we never emit; count body once
+            fc += count_jaxpr(eqn.params["body_jaxpr"].jaxpr)
+        elif name == "cond":
+            branches = eqn.params["branches"]
+            counts = [count_jaxpr(b.jaxpr) for b in branches]
+            best = max(counts, key=lambda c: c.total)
+            fc += best
+        elif name in ("custom_jvp_call", "custom_vjp_call", "custom_vjp_call_jaxpr"):
+            for pname in _CALL_JAXPR_PARAMS:
+                if pname in eqn.params:
+                    inner_j = eqn.params[pname]
+                    fc += count_jaxpr(getattr(inner_j, "jaxpr", inner_j))
+                    break
+        elif any(p in eqn.params for p in _CALL_JAXPR_PARAMS):
+            for pname in _CALL_JAXPR_PARAMS:
+                if pname in eqn.params:
+                    inner_j = eqn.params[pname]
+                    fc += count_jaxpr(getattr(inner_j, "jaxpr", inner_j))
+                    break
+        elif name in _ZERO_COST:
+            continue
+        else:
+            fc.elementwise_flops += _out_elems(eqn)
+    return fc
+
+
+def count_fn_flops(fn, *args, **kwargs) -> FlopCount:
+    """FLOPs of ``fn(*args)`` (args may be ShapeDtypeStructs)."""
+    jaxpr = jax.make_jaxpr(fn)(*args, **kwargs)
+    return count_jaxpr(jaxpr.jaxpr)

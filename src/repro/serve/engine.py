@@ -1,0 +1,100 @@
+"""Batched serving engine: prefill a request batch, then step the decode
+loop with greedy or temperature sampling.
+
+``serve_step`` (one token for the whole batch against the KV/recurrent
+state) is the function the dry-run lowers for the decode_32k / long_500k
+shapes; the engine wraps it with the request plumbing the examples use.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_serve_state, prefill
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0        # 0 = greedy
+    seed: int = 0
+    eos_id: Optional[int] = None
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg or ServeConfig()
+        self._prefill = jax.jit(lambda p, t, f: prefill(p, t, cfg, f))
+        self._step = jax.jit(
+            lambda p, tok, pos, st: decode_step(p, tok, pos, st, cfg)
+        )
+        self.metrics = {"prefill_s": 0.0, "decode_s": 0.0, "tokens_out": 0}
+
+    def _sample(self, logits, key):
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        scaled = logits / self.scfg.temperature
+        return jax.random.categorical(key, scaled, axis=-1)[:, None].astype(jnp.int32)
+
+    def generate(self, prompts: np.ndarray, frames=None) -> np.ndarray:
+        """prompts: (B, T) int32 -> (B, T + max_new) generated ids."""
+        cfg, scfg = self.cfg, self.scfg
+        b, t = prompts.shape
+        key = jax.random.PRNGKey(scfg.seed)
+
+        t0 = time.perf_counter()
+        logits, state = self._prefill(self.params, jnp.asarray(prompts), frames)
+        # Decode continues against a fresh cache sized for the full output;
+        # attention families re-prefill into it (cache_len = t + new).
+        cache_len = t + scfg.max_new_tokens
+        if not cfg.sub_quadratic:
+            full_state = init_serve_state(cfg, b, cache_len)
+            if cfg.is_encdec:
+                full_state["cross_kv"] = state["cross_kv"]
+            replay, state = state, full_state
+            # replay cached K/V into the wider cache
+            for name in ("layers",):
+                src = replay[name]
+                dst = state[name]
+                state[name] = jax.tree.map(
+                    lambda d, s: jax.lax.dynamic_update_slice(
+                        d, s.astype(d.dtype), (0,) * d.ndim
+                    ),
+                    dst,
+                    src,
+                )
+        self.metrics["prefill_s"] += time.perf_counter() - t0
+
+        out = [jnp.asarray(prompts)]
+        key, sub = jax.random.split(key)
+        tok = self._sample(logits, sub)
+        out.append(tok)
+        done = jnp.zeros((b,), bool)
+        t0 = time.perf_counter()
+        for i in range(1, scfg.max_new_tokens):
+            logits, state = self._step(self.params, tok, jnp.int32(t + i - 1), state)
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, sub)
+            if scfg.eos_id is not None:
+                done = done | (tok[:, 0] == scfg.eos_id)
+                if bool(done.all()):
+                    out.append(tok)
+                    break
+            out.append(tok)
+        self.metrics["decode_s"] += time.perf_counter() - t0
+        self.metrics["tokens_out"] += int(b * (len(out) - 1))
+        return np.asarray(jnp.concatenate(out, axis=1))
+
+    @property
+    def decode_tokens_per_s(self) -> float:
+        d = self.metrics["decode_s"]
+        return self.metrics["tokens_out"] / d if d > 0 else 0.0

@@ -1,0 +1,290 @@
+"""Discrete-event storage simulator (paper §5, simulator originally in C).
+
+Processes store requests in arrival order through a scheduler, tracks
+per-node occupancy, computes the paper's two quality metrics (W — bytes
+successfully stored — and T — average I/O throughput over
+encode+decode+write+read, Eq. in §3.2), and injects fail-stop node
+failures with chunk rescheduling (§5.7).
+
+Transfer model per the paper: all chunk transfers are parallel, no shared
+links, so the slowest node in the mapping bottlenecks both the write and
+the read; encode/decode times come from the calibrated linear model
+(:class:`repro.core.types.ECTimeModel`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core.algorithms import Scheduler
+from repro.core.reliability import min_parity_for_target
+from repro.core.types import ClusterView, DataItem, ECTimeModel, Placement, StorageNode
+
+__all__ = ["SimConfig", "SimResult", "StoredItem", "Simulator", "run_simulation"]
+
+
+@dataclasses.dataclass
+class SimConfig:
+    time_model: ECTimeModel = dataclasses.field(default_factory=ECTimeModel)
+    #: (day, node_id) forced fail-stop events; node_id -1 = weighted random.
+    failure_schedule: tuple[tuple[float, int], ...] = ()
+    #: dynamic schedulers may add parity chunks when rescheduling (§5.7).
+    allow_parity_growth: bool = True
+    seed: int = 0
+    #: measure per-item scheduling latency (Table 2).
+    measure_overhead: bool = False
+
+
+@dataclasses.dataclass
+class StoredItem:
+    item: DataItem
+    placement: Placement
+    chunk_mb: float
+    t_encode: float
+    t_decode: float
+    t_write: float
+    t_read: float
+
+    @property
+    def io_time(self) -> float:
+        return self.t_encode + self.t_decode + self.t_write + self.t_read
+
+
+@dataclasses.dataclass
+class SimResult:
+    stored_mb: float
+    total_mb: float
+    n_stored: int
+    n_failed_writes: int
+    #: bytes lost/dropped due to node failures (subset of stored_mb).
+    dropped_mb: float
+    #: Eq. §3.2: W / sum of IO times over successfully stored items.
+    throughput_mbps: float
+    time_breakdown: dict
+    per_node_used_mb: np.ndarray
+    stored_items: list[StoredItem]
+    failed_item_ids: list[int]
+    sched_overhead_s: list[float]
+    n_node_failures: int = 0
+
+    @property
+    def stored_fraction(self) -> float:
+        return self.stored_mb / self.total_mb if self.total_mb else 0.0
+
+    @property
+    def retained_fraction(self) -> float:
+        """Fraction of successfully-stored bytes still retained at the end
+        (Fig. 12 metric)."""
+        if self.stored_mb <= 0:
+            return 0.0
+        return max(0.0, (self.stored_mb - self.dropped_mb)) / self.stored_mb
+
+
+class Simulator:
+    def __init__(
+        self,
+        nodes: Sequence[StorageNode],
+        scheduler: Scheduler,
+        config: SimConfig | None = None,
+    ):
+        self.nodes = list(nodes)
+        self.scheduler = scheduler
+        self.config = config or SimConfig()
+        self.cluster = ClusterView.from_nodes(self.nodes)
+        self.rng = np.random.default_rng(self.config.seed)
+        self.live_items: dict[int, StoredItem] = {}
+        self.dropped_mb = 0.0
+        self.n_node_failures = 0
+
+    # -- store path ---------------------------------------------------------
+
+    def _io_times(self, item: DataItem, pl: Placement) -> tuple[float, float, float, float]:
+        tm = self.config.time_model
+        ids = list(pl.node_ids)
+        chunk = pl.chunk_size_mb(item.size_mb)
+        t_write = chunk / float(self.cluster.write_bw[ids].min())
+        t_read = chunk / float(self.cluster.read_bw[ids].min())
+        return (
+            tm.t_encode(pl.n, pl.k, item.size_mb),
+            tm.t_decode(pl.k, item.size_mb),
+            t_write,
+            t_read,
+        )
+
+    def store(self, item: DataItem) -> tuple[Optional[StoredItem], float]:
+        t0 = _time.perf_counter()
+        decision = self.scheduler.place(item, self.cluster)
+        overhead = _time.perf_counter() - t0
+        if decision.placement is None:
+            return None, overhead
+        pl = decision.placement
+        chunk = pl.chunk_size_mb(item.size_mb)
+        # Defensive re-check of Problem 1's write-success constraints.
+        ids = list(pl.node_ids)
+        assert np.all(self.cluster.alive[ids]), "scheduler placed on dead node"
+        assert np.all(self.cluster.free_mb[ids] >= chunk - 1e-6), (
+            "scheduler violated capacity"
+        )
+        self.cluster.commit(pl, chunk)
+        te, td, tw, tr = self._io_times(item, pl)
+        si = StoredItem(item, pl, chunk, te, td, tw, tr)
+        self.live_items[item.item_id] = si
+        return si, overhead
+
+    # -- failure path (§5.7) --------------------------------------------------
+
+    def fail_node(self, node_id: int) -> None:
+        """Fail-stop ``node_id``; reschedule lost chunks of affected items."""
+        if not self.cluster.alive[node_id]:
+            return
+        self.cluster.alive[node_id] = False
+        self.cluster.used_mb[node_id] = 0.0
+        self.n_node_failures += 1
+        for iid in list(self.live_items):
+            si = self.live_items[iid]
+            if node_id in si.placement.node_ids:
+                self._reschedule(si, node_id)
+
+    def _reschedule(self, si: StoredItem, failed_node: int) -> None:
+        pl = si.placement
+        survivors = [i for i in pl.node_ids if self.cluster.alive[i]]
+        lost = pl.n - len(survivors)
+        item = si.item
+        if pl.n - lost < pl.k:
+            # Fewer than K chunks survive: item is unrecoverable.
+            self._drop(si)
+            return
+        # Re-place the lost chunks; dynamic schedulers may also add parity.
+        chunk = si.chunk_mb
+        candidates = [
+            int(i)
+            for i in self.cluster.live_ids()
+            if i not in survivors and self.cluster.free_mb[i] >= chunk
+        ]
+        # Prefer the freest nodes (the dynamic algorithms' house style).
+        candidates.sort(key=lambda i: -self.cluster.free_mb[i])
+        new_map = list(survivors)
+        need = lost
+        for c in candidates:
+            if need == 0:
+                break
+            new_map.append(c)
+            need -= 1
+        if need > 0:
+            self._drop(si)
+            return
+        added_parity = 0
+        remaining = [c for c in candidates if c not in new_map]
+        while True:
+            fail = self.cluster.fail_probs(item.delta_t_days)[new_map]
+            mp = min_parity_for_target(fail, item.reliability_target)
+            if mp is not None and mp <= pl.p + added_parity:
+                break
+            if not (self.config.allow_parity_growth and self._dynamic()) or not remaining:
+                self._drop(si)
+                return
+            new_map.append(remaining.pop(0))
+            added_parity += 1
+        # Commit replacement chunks.
+        new_nodes = [n for n in new_map if n not in survivors]
+        for n in new_nodes:
+            self.cluster.used_mb[n] += chunk
+        si.placement = Placement(
+            k=pl.k, p=pl.p + added_parity, node_ids=tuple(new_map)
+        )
+
+    def _dynamic(self) -> bool:
+        return self.scheduler.name in (
+            "drex_sc",
+            "drex_lb",
+            "greedy_min_storage",
+            "greedy_least_used",
+        )
+
+    def _drop(self, si: StoredItem) -> None:
+        for n in si.placement.node_ids:
+            if self.cluster.alive[n]:
+                self.cluster.used_mb[n] = max(
+                    0.0, self.cluster.used_mb[n] - si.chunk_mb
+                )
+        self.dropped_mb += si.item.size_mb
+        del self.live_items[si.item.item_id]
+
+    # -- main loop ------------------------------------------------------------
+
+    def run(self, items: Sequence[DataItem]) -> SimResult:
+        schedule = sorted(self.config.failure_schedule)
+        sched_idx = 0
+        stored: list[StoredItem] = []
+        failed_ids: list[int] = []
+        overheads: list[float] = []
+        total_mb = 0.0
+        for item in items:
+            day = item.arrival_time / 86400.0
+            while sched_idx < len(schedule) and schedule[sched_idx][0] <= day:
+                _, nid = schedule[sched_idx]
+                if nid < 0:
+                    nid = self._draw_failing_node()
+                if nid is not None:
+                    self.fail_node(int(nid))
+                sched_idx += 1
+            total_mb += item.size_mb
+            si, ovh = self.store(item)
+            if self.config.measure_overhead:
+                overheads.append(ovh)
+            if si is None:
+                failed_ids.append(item.item_id)
+            else:
+                stored.append(si)
+        # Any failures scheduled after the last arrival still happen.
+        while sched_idx < len(schedule):
+            _, nid = schedule[sched_idx]
+            if nid < 0:
+                nid = self._draw_failing_node()
+            if nid is not None:
+                self.fail_node(int(nid))
+            sched_idx += 1
+
+        stored_mb = float(sum(s.item.size_mb for s in stored))
+        tsum = {
+            "encode": float(sum(s.t_encode for s in stored)),
+            "decode": float(sum(s.t_decode for s in stored)),
+            "write": float(sum(s.t_write for s in stored)),
+            "read": float(sum(s.t_read for s in stored)),
+        }
+        io_total = sum(tsum.values())
+        return SimResult(
+            stored_mb=stored_mb,
+            total_mb=total_mb,
+            n_stored=len(stored),
+            n_failed_writes=len(failed_ids),
+            dropped_mb=self.dropped_mb,
+            throughput_mbps=stored_mb / io_total if io_total > 0 else 0.0,
+            time_breakdown=tsum,
+            per_node_used_mb=self.cluster.used_mb.copy(),
+            stored_items=stored,
+            failed_item_ids=failed_ids,
+            sched_overhead_s=overheads,
+            n_node_failures=self.n_node_failures,
+        )
+
+    def _draw_failing_node(self) -> Optional[int]:
+        live = self.cluster.live_ids()
+        if live.size == 0:
+            return None
+        daily = -np.expm1(-self.cluster.afr[live] / 365.25)
+        w = daily / daily.sum()
+        return int(self.rng.choice(live, p=w))
+
+
+def run_simulation(
+    nodes: Sequence[StorageNode],
+    scheduler: Scheduler,
+    items: Sequence[DataItem],
+    config: SimConfig | None = None,
+) -> SimResult:
+    return Simulator(nodes, scheduler, config).run(items)

@@ -1,0 +1,14 @@
+"""Training substrate: sharded train step, trainer loop, elastic rescale."""
+
+from .step import TrainState, make_train_step, init_train_state, train_state_shardings, batch_shardings
+from .trainer import Trainer, TrainerConfig
+
+__all__ = [
+    "TrainState",
+    "make_train_step",
+    "init_train_state",
+    "train_state_shardings",
+    "batch_shardings",
+    "Trainer",
+    "TrainerConfig",
+]

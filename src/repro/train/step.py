@@ -1,0 +1,153 @@
+"""The sharded training step (pjit) and train-state plumbing.
+
+FSDP x TP x (pod-DP): parameters and optimizer moments are sharded over
+the data axes (logical "embed" rule) and the tensor axes over "model";
+activations shard batch over ("pod","data"). XLA SPMD inserts the
+per-layer all-gathers (FSDP) and the gradient reduce-scatters.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import init_params, loss_fn, param_axes
+from repro.models.config import ModelConfig
+from repro.models.sharding import activate_mesh, logical_to_spec, rules_for
+from repro.optim import (
+    AdamWConfig,
+    CompressionState,
+    OptState,
+    adamw_init,
+    adamw_update,
+    compress_decompress,
+    compression_init,
+)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+    comp: Optional[CompressionState]
+
+
+def init_train_state(cfg: ModelConfig, key, compression: bool = False) -> TrainState:
+    params = init_params(cfg, key)
+    return TrainState(
+        params=params,
+        opt=adamw_init(params),
+        comp=compression_init(params) if compression else None,
+    )
+
+
+def _axes_tree_to_shardings(axes_tree, shapes_tree, mesh: Mesh):
+    rules = rules_for(mesh)
+
+    def one(ax, shp):
+        return NamedSharding(mesh, logical_to_spec(ax, shp.shape, mesh, rules))
+
+    return jax.tree.map(
+        one,
+        axes_tree,
+        shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def train_state_shardings(cfg: ModelConfig, mesh: Mesh, compression: bool = False):
+    """NamedShardings for the full TrainState (params + moments + master)."""
+    axes = param_axes(cfg)
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    p_sh = _axes_tree_to_shardings(axes, shapes, mesh)
+    scalar = NamedSharding(mesh, P())
+    opt_sh = OptState(step=scalar, mu=p_sh, nu=p_sh, master=p_sh)
+    comp_sh = CompressionState(error=p_sh) if compression else None
+    return TrainState(params=p_sh, opt=opt_sh, comp=comp_sh)
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh):
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    tok = NamedSharding(mesh, P(dp, None))
+    out = {"tokens": tok, "labels": tok}
+    if cfg.is_encdec:
+        out["frames"] = NamedSharding(mesh, P(dp, None, None))
+    return out
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    mesh: Optional[Mesh] = None,
+    compression: bool = False,
+):
+    """Build the (optionally pjit-wrapped) train step.
+
+    Returns ``step(state, batch) -> (state, metrics)``; when ``mesh`` is
+    given the function is jitted with full in/out shardings and donated
+    state."""
+
+    def train_step(state: TrainState, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg), has_aux=True
+        )(state.params)
+        comp = state.comp
+        if compression:
+            grads, comp = compress_decompress(grads, comp)
+        new_params, new_opt, om = adamw_update(opt_cfg, grads, state.opt, state.params)
+        out_metrics = {
+            "loss": loss.astype(jnp.float32),
+            "nll": metrics["nll"].astype(jnp.float32),
+            "grad_norm": om["grad_norm"],
+            "lr": om["lr"],
+        }
+        return TrainState(new_params, new_opt, comp), out_metrics
+
+    if mesh is None:
+        return jax.jit(train_step, donate_argnums=0)
+
+    st_sh = train_state_shardings(cfg, mesh, compression)
+    b_sh = batch_shardings(cfg, mesh)
+    scalar = NamedSharding(mesh, P())
+    metric_sh = {k: scalar for k in ("loss", "nll", "grad_norm", "lr")}
+
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(st_sh, b_sh),
+        out_shardings=(st_sh, metric_sh),
+        donate_argnums=0,
+    )
+
+    class _Wrapped:
+        """Trace under activate_mesh so logical constraints resolve."""
+
+        def __init__(self):
+            self.fn = jitted
+
+        def __call__(self, state, batch):
+            with activate_mesh(mesh):
+                return self.fn(state, batch)
+
+        def lower(self, *a, **kw):
+            with activate_mesh(mesh), mesh:
+                return self.fn.lower(*a, **kw)
+
+    return _Wrapped()
+
+
+def reshard_state(state: TrainState, cfg: ModelConfig, new_mesh: Mesh,
+                  compression: bool = False) -> TrainState:
+    """Elastic rescale: move a TrainState onto a different mesh (e.g. after
+    losing a pod). Shardings are recomputed from the logical axes, so any
+    mesh whose axes divide the dims works."""
+    sh = train_state_shardings(cfg, new_mesh, compression)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s),
+        state,
+        sh,
+        is_leaf=lambda x: x is None,
+    )

@@ -1,0 +1,177 @@
+"""Unit + property tests for the reliability model (paper §3.1)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.reliability import (
+    batch_pr_avail_exact,
+    meets_target,
+    min_parity_for_target,
+    poisson_binomial_cdf,
+    pr_avail,
+    pr_failure,
+)
+
+
+class TestPrFailure:
+    def test_eq1_closed_form(self):
+        # lambda=1.0/yr over half a year: 1 - e^-0.5
+        assert pr_failure(1.0, 0.5) == pytest.approx(1.0 - math.exp(-0.5))
+
+    def test_zero_rate_never_fails(self):
+        assert pr_failure(0.0, 10.0) == 0.0
+
+    def test_zero_window_never_fails(self):
+        assert pr_failure(5.0, 0.0) == 0.0
+
+    def test_vectorized(self):
+        lam = np.array([0.01, 0.1, 1.0])
+        out = pr_failure(lam, 1.0)
+        assert out.shape == (3,)
+        assert np.all(np.diff(out) > 0)  # monotone in rate
+
+    def test_rejects_negative(self):
+        with pytest.raises(ValueError):
+            pr_failure(-1.0, 1.0)
+        with pytest.raises(ValueError):
+            pr_failure(1.0, -1.0)
+
+
+def _brute_force_cdf(probs, k):
+    """Enumerate all 2^n outcomes — ground truth for small n."""
+    n = len(probs)
+    total = 0.0
+    for mask in range(2**n):
+        nfail = bin(mask).count("1")
+        if nfail > k:
+            continue
+        pr = 1.0
+        for i in range(n):
+            pr *= probs[i] if (mask >> i) & 1 else 1.0 - probs[i]
+        total += pr
+    return total
+
+
+class TestPoissonBinomial:
+    def test_matches_brute_force(self):
+        probs = [0.1, 0.25, 0.03, 0.4, 0.07]
+        for k in range(-1, 6):
+            assert poisson_binomial_cdf(probs, k, "exact") == pytest.approx(
+                _brute_force_cdf(probs, k), abs=1e-12
+            )
+
+    def test_binomial_special_case(self):
+        # iid p -> Binomial CDF
+        p, n, k = 0.2, 12, 3
+        from math import comb
+
+        want = sum(comb(n, j) * p**j * (1 - p) ** (n - j) for j in range(k + 1))
+        assert poisson_binomial_cdf([p] * n, k, "exact") == pytest.approx(want)
+
+    def test_bounds(self):
+        probs = [0.5] * 8
+        assert poisson_binomial_cdf(probs, -1) == 0.0
+        assert poisson_binomial_cdf(probs, 8) == 1.0
+        assert poisson_binomial_cdf(probs, 100) == 1.0
+
+    def test_rna_close_to_exact(self):
+        rng = np.random.default_rng(0)
+        for _ in range(25):
+            n = int(rng.integers(10, 120))
+            probs = rng.uniform(0.001, 0.3, size=n)
+            k = int(rng.integers(0, n))
+            exact = poisson_binomial_cdf(probs, k, "exact")
+            rna = poisson_binomial_cdf(probs, k, "rna")
+            assert rna == pytest.approx(exact, abs=2e-2)
+
+    @given(
+        st.lists(st.floats(0.0, 1.0), min_size=1, max_size=10),
+        st.integers(-1, 11),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_property_matches_brute_force(self, probs, k):
+        got = poisson_binomial_cdf(probs, k, "exact")
+        want = _brute_force_cdf(probs, k)
+        assert got == pytest.approx(want, abs=1e-9)
+
+    @given(st.lists(st.floats(0.0, 0.99), min_size=2, max_size=20))
+    @settings(max_examples=100, deadline=None)
+    def test_property_monotone_in_k(self, probs):
+        vals = [poisson_binomial_cdf(probs, k, "exact") for k in range(len(probs) + 1)]
+        assert all(b >= a - 1e-12 for a, b in zip(vals, vals[1:]))
+        assert vals[-1] == pytest.approx(1.0)
+
+    @given(
+        st.lists(st.floats(0.001, 0.5), min_size=2, max_size=12),
+        st.integers(0, 5),
+        st.floats(0.01, 0.3),
+    )
+    @settings(max_examples=100, deadline=None)
+    def test_property_extra_parity_never_hurts(self, probs, k, bump):
+        """Adding parity weakly increases availability; raising any node's
+        failure probability weakly decreases it."""
+        base = poisson_binomial_cdf(probs, k, "exact")
+        assert poisson_binomial_cdf(probs, k + 1, "exact") >= base - 1e-12
+        worse = list(probs)
+        worse[0] = min(1.0, worse[0] + bump)
+        assert poisson_binomial_cdf(worse, k, "exact") <= base + 1e-12
+
+
+class TestMinParity:
+    def test_matches_linear_scan(self):
+        rng = np.random.default_rng(1)
+        for _ in range(30):
+            n = int(rng.integers(2, 20))
+            probs = rng.uniform(0.0, 0.5, size=n)
+            target = float(rng.uniform(0.5, 0.999999))
+            got = min_parity_for_target(probs, target)
+            want = None
+            for p in range(n):
+                if poisson_binomial_cdf(probs, p, "exact") >= target:
+                    want = p
+                    break
+            assert got == want
+
+    def test_impossible_target(self):
+        # Nodes that always fail can never deliver any availability at P<N.
+        assert min_parity_for_target([1.0, 1.0, 1.0], 0.99) is None
+
+    def test_perfect_nodes(self):
+        assert min_parity_for_target([0.0, 0.0, 0.0], 0.999999) == 0
+
+
+class TestPrAvail:
+    def test_figure2_example_semantics(self):
+        """Paper Fig. 2: 3 data + 2 parity on 5 nodes survives <= 2 failures."""
+        probs = [0.05] * 5
+        avail = pr_avail(probs, 2)
+        want = _brute_force_cdf(probs, 2)
+        assert avail == pytest.approx(want)
+        assert meets_target(probs, 2, 0.99)
+
+    def test_replication_is_special_case(self):
+        """Replication = K=1 with P copies: item lost iff all P+1 fail."""
+        p = 0.1
+        for copies in range(1, 5):
+            avail = pr_avail([p] * (copies + 1), copies)
+            assert avail == pytest.approx(1.0 - p ** (copies + 1))
+
+
+class TestBatchJax:
+    def test_matches_scalar(self):
+        rng = np.random.default_rng(2)
+        mats = rng.uniform(0.0, 0.4, size=(16, 9))
+        out = np.asarray(batch_pr_avail_exact(mats, 2))
+        for i in range(16):
+            want = poisson_binomial_cdf(mats[i], 2, "exact")
+            assert out[i] == pytest.approx(want, abs=1e-5)
+
+    def test_padding_with_zero_prob_is_identity(self):
+        base = np.array([[0.1, 0.2, 0.3]])
+        padded = np.array([[0.1, 0.2, 0.3, 0.0, 0.0]])
+        a = float(batch_pr_avail_exact(base, 1)[0])
+        b = float(batch_pr_avail_exact(padded, 1)[0])
+        assert a == pytest.approx(b, abs=1e-6)

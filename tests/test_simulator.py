@@ -1,0 +1,157 @@
+"""Tests for the storage simulator (§5) incl. failure injection (§5.7)."""
+
+import numpy as np
+import pytest
+
+from repro.core import make_scheduler
+from repro.storage import SimConfig, Simulator, make_node_set, make_trace, run_simulation
+from repro.storage.traces import random_reliability_targets
+
+
+class TestTraces:
+    @pytest.mark.parametrize("name", ["meva", "sentinel2", "swim", "ibm_cos"])
+    def test_table3_stats(self, name):
+        from repro.storage.traces import _SPECS
+
+        spec = _SPECS[name]
+        items = make_trace(name, seed=0, n_items=4000)
+        sizes = np.array([i.size_mb for i in items])
+        assert sizes.min() >= spec.min_mb - 1e-9
+        assert sizes.max() <= spec.max_mb + 1e-9
+        # Mean within 25% of Table 3 (clipping shifts the lognormal mean).
+        assert abs(sizes.mean() - spec.mean_mb) / spec.mean_mb < 0.25
+
+    def test_deterministic(self):
+        a = make_trace("meva", seed=7, n_items=100)
+        b = make_trace("meva", seed=7, n_items=100)
+        assert [i.size_mb for i in a] == [i.size_mb for i in b]
+        c = make_trace("meva", seed=8, n_items=100)
+        assert [i.size_mb for i in a] != [i.size_mb for i in c]
+
+    def test_total_mb_standardization(self):
+        items = make_trace("meva", seed=0, total_mb=50_000.0)
+        total = sum(i.size_mb for i in items)
+        assert total >= 50_000.0
+        assert total - items[-1].size_mb < 50_000.0  # minimal overshoot
+
+    def test_arrivals_sorted(self):
+        items = make_trace("meva", seed=0, n_items=500)
+        ts = [i.arrival_time for i in items]
+        assert ts == sorted(ts)
+
+    def test_random_nines_distribution(self):
+        rng = np.random.default_rng(0)
+        rts = random_reliability_targets(20_000, rng)
+        assert rts.min() >= 0.90
+        assert rts.max() <= 0.9999999
+        # All seven nine-buckets occupied.
+        assert (rts < 0.99).any() and (rts > 0.99999).any()
+
+
+class TestSimulator:
+    def test_conservation_of_bytes(self):
+        nodes = make_node_set("most_used", 0.001)
+        items = make_trace("meva", seed=0, n_items=300, reliability=0.9)
+        res = run_simulation(nodes, make_scheduler("drex_lb"), items)
+        # Bytes on nodes == sum over stored items of chunk * N.
+        want = sum(s.chunk_mb * s.placement.n for s in res.stored_items)
+        assert res.per_node_used_mb.sum() == pytest.approx(want, rel=1e-9)
+        assert res.n_stored + res.n_failed_writes == len(items)
+
+    def test_throughput_definition(self):
+        nodes = make_node_set("most_used", 0.001)
+        items = make_trace("meva", seed=0, n_items=100, reliability=0.9)
+        res = run_simulation(nodes, make_scheduler("ec(3,2)"), items)
+        io = sum(res.time_breakdown.values())
+        assert res.throughput_mbps == pytest.approx(res.stored_mb / io)
+
+    def test_write_read_bottleneck_is_slowest_node(self):
+        nodes = make_node_set("most_used", 0.001)
+        items = make_trace("meva", seed=0, n_items=50, reliability=0.9)
+        sim = Simulator(nodes, make_scheduler("ec(3,2)"))
+        for item in items:
+            si, _ = sim.store(item)
+            if si is None:
+                continue
+            ids = list(si.placement.node_ids)
+            assert si.t_write == pytest.approx(
+                si.chunk_mb / sim.cluster.write_bw[ids].min()
+            )
+            assert si.t_read == pytest.approx(
+                si.chunk_mb / sim.cluster.read_bw[ids].min()
+            )
+
+
+class TestFailures:
+    def _run(self, name, schedule, rt=0.9):
+        nodes = make_node_set("most_unreliable", 0.001)
+        items = make_trace("meva", seed=0, n_items=400, reliability=rt)
+        cfg = SimConfig(failure_schedule=tuple(schedule))
+        return run_simulation(nodes, make_scheduler(name), items, cfg)
+
+    def test_no_failures_retains_everything(self):
+        res = self._run("drex_sc", [])
+        assert res.retained_fraction == 1.0
+        assert res.n_node_failures == 0
+
+    def test_failed_node_is_emptied_and_unused(self):
+        nodes = make_node_set("most_used", 0.001)
+        items = make_trace("meva", seed=0, n_items=200, reliability=0.9)
+        cfg = SimConfig(failure_schedule=((30.0, 2),))
+        sim = Simulator(nodes, make_scheduler("drex_lb"), cfg)
+        res = sim.run(items)
+        assert not sim.cluster.alive[2]
+        assert res.per_node_used_mb[2] == 0.0
+        for s in res.stored_items:
+            if s.item.arrival_time / 86400.0 > 30.0:
+                assert 2 not in s.placement.node_ids
+
+    def test_dynamic_reschedules_after_failure(self):
+        res = self._run("drex_sc", [(30.0, 0), (40.0, 1)])
+        assert res.n_node_failures == 2
+        # Early-day failures with plenty of spare nodes: everything survives
+        # via rescheduling (paper Fig. 12a, <=4 failures rows at 100%).
+        assert res.retained_fraction > 0.95
+
+    def test_items_below_k_survivors_are_dropped(self):
+        nodes = make_node_set("most_used", 0.001)
+        items = make_trace("meva", seed=0, n_items=150, reliability=0.9)
+        # Kill 8 of 10 nodes mid-run: EC(6,3) needs 9 -> mass drop.
+        sched = tuple((35.0 + i * 0.1, i) for i in range(8))
+        cfg = SimConfig(failure_schedule=sched)
+        res = run_simulation(nodes, make_scheduler("ec(6,3)"), items, cfg)
+        assert res.retained_fraction < 0.6
+
+    def test_static_cannot_grow_parity(self):
+        """Static EC reschedules chunks but never adds parity (§5.7)."""
+        nodes = make_node_set("most_used", 0.001)
+        items = make_trace("meva", seed=0, n_items=100, reliability=0.9)
+        cfg = SimConfig(failure_schedule=((30.0, 0),))
+        res = run_simulation(nodes, make_scheduler("ec(3,2)"), items, cfg)
+        for s in res.stored_items:
+            assert s.placement.p == 2
+
+    def test_reschedule_preserves_reliability_constraint(self):
+        from repro.core.reliability import pr_avail
+
+        nodes = make_node_set("most_unreliable", 0.001)
+        items = make_trace("meva", seed=0, n_items=200, reliability=0.9)
+        cfg = SimConfig(failure_schedule=((20.0, 0), (35.0, 4)))
+        sim = Simulator(nodes, make_scheduler("drex_sc"), cfg)
+        res = sim.run(items)
+        for s in res.stored_items:
+            ids = list(s.placement.node_ids)
+            if not all(sim.cluster.alive[i] for i in ids):
+                continue  # item was inspected pre-final-failure
+            fp = sim.cluster.fail_probs(s.item.delta_t_days)[ids]
+            assert pr_avail(fp, s.placement.p) >= s.item.reliability_target - 1e-9
+
+
+class TestSchedulingOverhead:
+    def test_overhead_measured(self):
+        nodes = make_node_set("most_used", 0.001)
+        items = make_trace("meva", seed=0, n_items=20, reliability=0.9)
+        cfg = SimConfig(measure_overhead=True)
+        res = run_simulation(nodes, make_scheduler("drex_lb"), items, cfg)
+        assert len(res.sched_overhead_s) == 20
+        assert all(t >= 0 for t in res.sched_overhead_s)
