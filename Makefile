@@ -1,0 +1,14 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: verify test smoke-bench
+
+## Tier-1 gate: full test suite + a smoke run of the scheduling-overhead
+## benchmark (exercises the engine's batched place_many end to end).
+verify: test smoke-bench
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+smoke-bench:
+	$(PYTHON) -m benchmarks.run --only table2 --smoke

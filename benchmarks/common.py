@@ -12,7 +12,7 @@ import json
 import pathlib
 import time
 
-from repro.core import SCHEDULER_NAMES, make_scheduler
+from repro.core import SCHEDULER_NAMES, create_scheduler
 from repro.storage import SimConfig, make_node_set, make_trace, run_simulation
 
 RESULTS = pathlib.Path("results/benchmarks")
@@ -39,7 +39,7 @@ def sim(node_set: str, dataset: str, algo: str, *, fill=0.95, reliability="rando
     )
     cfg = SimConfig(failure_schedule=tuple(failure_schedule), seed=seed)
     t0 = time.perf_counter()
-    res = run_simulation(nodes, make_scheduler(algo), items, cfg)
+    res = run_simulation(nodes, create_scheduler(algo), items, cfg)
     wall = time.perf_counter() - t0
     return res, wall, items
 

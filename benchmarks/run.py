@@ -3,7 +3,10 @@
 Prints ``name,us_per_call,derived`` CSV per the harness contract, and
 writes per-figure JSON into results/benchmarks/ for EXPERIMENTS.md.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig5,fig12]
+    PYTHONPATH=src python -m benchmarks.run [--only fig5,fig12] [--smoke]
+
+``--smoke`` shrinks the parameterizable benchmarks (currently table2) to
+CI-sized sweeps; used by ``make verify`` / the GitHub Actions workflow.
 """
 
 from __future__ import annotations
@@ -41,17 +44,25 @@ BENCHES = {
 }
 
 
+#: reduced parameters per benchmark under --smoke (others run unchanged).
+SMOKE_KWARGS = {
+    "table2": dict(sizes=(10, 50), reps=1, batch=100),
+}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated subset")
+    ap.add_argument("--smoke", action="store_true", help="CI-sized sweeps")
     args = ap.parse_args()
     names = list(BENCHES) if not args.only else args.only.split(",")
     print("name,us_per_call,derived")
     failures = []
     for name in names:
         t0 = time.perf_counter()
+        kwargs = SMOKE_KWARGS.get(name, {}) if args.smoke else {}
         try:
-            for line in BENCHES[name]():
+            for line in BENCHES[name](**kwargs):
                 print(line, flush=True)
         except Exception as e:  # keep the harness running, report at exit
             failures.append((name, repr(e)))

@@ -28,8 +28,7 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-from repro.core import DataItem, Scheduler, make_scheduler
-from repro.core.reliability import min_parity_for_target
+from repro.core import BatchContext, DataItem, PlacementEngine, Scheduler
 from repro.ec import ECCodec
 from repro.train.step import TrainState
 
@@ -56,6 +55,18 @@ class _Group:
     orig_nbytes: int
 
 
+def _pad_to_bucket(payload: bytes) -> bytes:
+    """Pad to power-of-two bucket sizes so the codec sees a bounded set of
+    chunk shapes (one jit compile per (K, P, bucket) instead of one per
+    group) — steady-state encode throughput, <=2x padding on the tail
+    group only.  Every (re-)encode of a group MUST go through this so
+    repaired chunks keep the shape of the surviving ones."""
+    bucket = 4096
+    while bucket < len(payload):
+        bucket <<= 1
+    return payload + b"\x00" * (bucket - len(payload))
+
+
 class DRexCheckpointer:
     def __init__(
         self,
@@ -64,9 +75,11 @@ class DRexCheckpointer:
         policy: CheckpointPolicy | None = None,
     ):
         self.fabric = fabric
-        self.scheduler = (
-            make_scheduler(scheduler) if isinstance(scheduler, str) else scheduler
-        )
+        # auto_commit=False: the fabric is the byte-accounting authority —
+        # occupancy updates when chunks actually land (fabric.put), not at
+        # decision time.
+        self.engine = PlacementEngine(fabric.cluster, scheduler, auto_commit=False)
+        self.scheduler = self.engine.scheduler
         self.policy = policy or CheckpointPolicy()
         self._manifests: dict[int, dict] = {}
         self._pool = ThreadPoolExecutor(max_workers=1)
@@ -83,6 +96,10 @@ class DRexCheckpointer:
         # (shapes/dtypes per leaf live in the manifest).
         manifest: dict[str, Any] = {"step": step, "leaves": []}
         policy = self.policy
+        # One checkpoint = one placement batch: groups share retention and
+        # reliability target, so the engine's batch context amortizes the
+        # scheduler's reliability DP across all groups of this save.
+        ctx = BatchContext()
         for li, leaf in enumerate(leaves):
             if leaf is None:
                 manifest["leaves"].append(None)
@@ -96,7 +113,7 @@ class DRexCheckpointer:
             max_bytes = int(policy.item_mb * 1e6)
             for off in range(0, max(len(raw), 1), max_bytes):
                 payload = raw[off : off + max_bytes]
-                g = self._store_group(payload, step, li, off // max_bytes)
+                g = self._store_group(payload, step, li, off // max_bytes, ctx)
                 manifest["leaves"][li]["groups"].append(dataclasses.asdict(g))
         self._manifests[step] = manifest
         self._gc(step)
@@ -116,18 +133,17 @@ class DRexCheckpointer:
 
         return self._pool.submit(work)
 
-    def _store_group(self, payload: bytes, step: int, leaf_i: int, part: int) -> _Group:
+    def _store_group(
+        self,
+        payload: bytes,
+        step: int,
+        leaf_i: int,
+        part: int,
+        ctx: BatchContext | None = None,
+    ) -> _Group:
         policy = self.policy
         orig_len = len(payload)
-        # Bucket payloads to power-of-two sizes so the codec sees a bounded
-        # set of chunk shapes (one jit compile per (K, P, bucket) instead of
-        # one per group) — steady-state encode throughput, <=2x padding on
-        # the tail group only.
-        bucket = 4096
-        while bucket < orig_len:
-            bucket <<= 1
-        if bucket != orig_len:
-            payload = payload + b"\x00" * (bucket - orig_len)
+        payload = _pad_to_bucket(payload)
         size_mb = max(len(payload) / 1e6, 1e-6)
         self._item_counter += 1
         item = DataItem(
@@ -137,15 +153,14 @@ class DRexCheckpointer:
             delta_t_days=policy.retention_days,
             reliability_target=policy.reliability_target,
         )
-        t0 = time.perf_counter()
-        decision = self.scheduler.place(item, self.fabric.cluster)
-        self.stats["place_s"] += time.perf_counter() - t0
-        if decision.placement is None:
+        record = self.engine.place(item, ctx=ctx)
+        self.stats["place_s"] += record.overhead_s
+        if record.placement is None:
             raise IOError(
                 f"D-Rex could not place checkpoint group ({size_mb:.1f} MB, "
-                f"RT={policy.reliability_target}): {decision.reason}"
+                f"RT={policy.reliability_target}): {record.reason}"
             )
-        pl = decision.placement
+        pl = record.placement
         codec = ECCodec(pl.k, pl.p, use_kernel=policy.use_kernel)
         t0 = time.perf_counter()
         chunks = codec.encode(payload)
@@ -229,7 +244,9 @@ class DRexCheckpointer:
                     continue
                 payload = self._load_group(g)  # raises if > P lost
                 codec = ECCodec(g.k, g.p, use_kernel=self.policy.use_kernel)
-                chunks = codec.encode(payload)
+                # Re-pad exactly as the original encode did: replacement
+                # chunks must match the surviving chunks' shape.
+                chunks = codec.encode(_pad_to_bucket(payload))
                 chunk_mb = chunks.shape[1] / 1e6
                 live = [
                     n

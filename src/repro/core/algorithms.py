@@ -5,19 +5,34 @@ of Problem 1: choose ``(K_d, P_d, M_d)`` subject to the reliability
 constraint (Eq. 3) and per-node capacity, optimizing storage and I/O.
 
 All schedulers see the cluster through :class:`repro.core.types.ClusterView`
-and are purely functional over it (the caller commits the placement).
+and are purely functional over it (the caller — normally a
+:class:`repro.core.engine.PlacementEngine` — commits the placement).
+Each algorithm registers itself with :mod:`repro.core.registry`, declaring
+its capabilities (adaptive (K,P)?, may grow parity on reschedule?) so the
+simulator and checkpoint plane never match on name strings.
+
+The reliability feasibility question every prefix-greedy algorithm asks
+("min parity for the first n nodes of my sorted order?") is answered by
+one shared :class:`repro.core.reliability.ParityFrontier` DP; under
+batched placement (``PlacementEngine.place_many``) the optional ``ctx``
+argument memoizes frontiers across items so the DP cost amortizes.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import itertools
 import math
-from typing import Optional, Sequence
+from typing import Optional
 
 import numpy as np
 
-from .reliability import min_parity_for_target
+from .registry import (
+    create_scheduler,
+    get_spec,
+    register_scheduler,
+    register_scheduler_family,
+    SchedulerCapabilities,
+)
+from .reliability import min_parity_for_target, ParityFrontier
 from .types import ClusterView, DataItem, Decision, ECTimeModel, Placement
 
 __all__ = [
@@ -35,13 +50,25 @@ __all__ = [
 
 
 class Scheduler:
-    """Base interface. ``place`` must not mutate ``cluster``."""
+    """Base interface. ``place`` must not mutate ``cluster``.
+
+    ``ctx`` is an optional :class:`repro.core.engine.BatchContext`; when
+    provided, pure derived quantities (failure probabilities per
+    retention window, parity frontiers per sorted node sequence) are
+    memoized across the items of a batch.  Results are bit-identical with
+    and without a context — the cache keys on the exact inputs of each
+    computation.
+    """
 
     name: str = "base"
+    #: capability record; overwritten by the registry decorator.
+    capabilities: SchedulerCapabilities = SchedulerCapabilities()
     #: smallest item size seen so far (MB); simulator keeps this fresh.
     smin_mb: float = 1.0
 
-    def place(self, item: DataItem, cluster: ClusterView) -> Decision:
+    def place(
+        self, item: DataItem, cluster: ClusterView, ctx=None
+    ) -> Decision:
         raise NotImplementedError
 
     def observe_item(self, item: DataItem) -> None:
@@ -63,12 +90,35 @@ class Scheduler:
         free = cluster.free_mb[np.asarray(node_ids)]
         return bool(np.all(free >= chunk_mb))
 
+    @staticmethod
+    def _fail_probs(cluster: ClusterView, item: DataItem, ctx) -> np.ndarray:
+        if ctx is not None:
+            return ctx.fail_probs(cluster, item.delta_t_days)
+        return cluster.fail_probs(item.delta_t_days)
+
+    @staticmethod
+    def _frontier(probs: np.ndarray, target: float, ctx) -> ParityFrontier:
+        if ctx is not None:
+            return ctx.frontier(probs, target)
+        return ParityFrontier(probs, target)
+
+    @staticmethod
+    def _min_parity(probs: np.ndarray, target: float, ctx) -> int:
+        """Min parity for an arbitrary (non-prefix) mapping; -1 infeasible."""
+        if ctx is not None:
+            return ctx.min_parity(probs, target)
+        mp = min_parity_for_target(probs, target)
+        return -1 if mp is None else mp
+
 
 # ---------------------------------------------------------------------------
 # §4.1 GreedyMinStorage
 # ---------------------------------------------------------------------------
 
 
+@register_scheduler(
+    "greedy_min_storage", adaptive=True, supports_parity_growth=True
+)
 class GreedyMinStorage(Scheduler):
     """Minimize per-item storage footprint ``(size/K) * N`` s.t. reliability
     (Eq. 4); mapping favors the fastest (write-bandwidth) nodes *among
@@ -78,13 +128,13 @@ class GreedyMinStorage(Scheduler):
 
     name = "greedy_min_storage"
 
-    def place(self, item: DataItem, cluster: ClusterView) -> Decision:
+    def place(self, item: DataItem, cluster: ClusterView, ctx=None) -> Decision:
         self.observe_item(item)
         by_bw = self._live_sorted(cluster, cluster.write_bw)
         L = len(by_bw)
         if L < 2:
             return Decision(None, 0, "fewer than 2 live nodes")
-        fail_all = cluster.fail_probs(item.delta_t_days)
+        fail_all = self._fail_probs(cluster, item, ctx)
         free = cluster.free_mb
 
         best: Optional[Placement] = None
@@ -104,10 +154,10 @@ class GreedyMinStorage(Scheduler):
                 if len(fitting) < n:
                     break
                 mapping = fitting[:n]
-                mp = min_parity_for_target(
-                    fail_all[mapping], item.reliability_target
+                mp = self._min_parity(
+                    fail_all[mapping], item.reliability_target, ctx
                 )
-                if mp is None:
+                if mp < 0:
                     break
                 p_star = max(1, mp)  # the repository always keeps parity
                 k_new = n - p_star
@@ -135,6 +185,9 @@ class GreedyMinStorage(Scheduler):
 # ---------------------------------------------------------------------------
 
 
+@register_scheduler(
+    "greedy_least_used", adaptive=True, supports_parity_growth=True
+)
 class GreedyLeastUsed(Scheduler):
     """Minimize ``K+P`` s.t. reliability (Eq. 5); nodes with the highest
     free space get the chunks (then minimal parity among feasible).
@@ -144,30 +197,24 @@ class GreedyLeastUsed(Scheduler):
 
     name = "greedy_least_used"
 
-    def place(self, item: DataItem, cluster: ClusterView) -> Decision:
+    def place(self, item: DataItem, cluster: ClusterView, ctx=None) -> Decision:
         self.observe_item(item)
         by_free = self._live_sorted(cluster, cluster.free_mb)
         L = len(by_free)
         if L < 2:
             return Decision(None, 0, "fewer than 2 live nodes")
-        fail_all = cluster.fail_probs(item.delta_t_days)
+        fail_all = self._fail_probs(cluster, item, ctx)
+        frontier = self._frontier(
+            fail_all[by_free], item.reliability_target, ctx
+        )
 
         considered = 0
-        dp = np.zeros(L + 1, dtype=np.float64)
-        dp[0] = 1.0
-        for n_idx in range(L):
-            pi = fail_all[by_free[n_idx]]
-            dp[1 : n_idx + 2] = dp[1 : n_idx + 2] * (1.0 - pi) + dp[: n_idx + 1] * pi
-            dp[0] *= 1.0 - pi
-            n = n_idx + 1
-            if n < 2:
-                continue
+        for n in range(2, L + 1):
             considered += 1
-            cdf = np.cumsum(dp[: n + 1])
-            feas = np.nonzero(cdf[:n] >= item.reliability_target)[0]
-            if feas.size == 0:
+            mp = frontier.min_parity(n)
+            if mp < 0:
                 continue
-            p_star = max(1, int(feas[0]))  # the repository always keeps parity
+            p_star = max(1, mp)  # the repository always keeps parity
             k = n - p_star
             if k < 2:
                 continue
@@ -188,46 +235,40 @@ class GreedyLeastUsed(Scheduler):
 # ---------------------------------------------------------------------------
 
 
+@register_scheduler("drex_lb", adaptive=True, supports_parity_growth=True)
 class DRexLB(Scheduler):
     """Balance-penalty minimization; smallest feasible parity (Alg. 1)."""
 
     name = "drex_lb"
 
-    def place(self, item: DataItem, cluster: ClusterView) -> Decision:
+    def place(self, item: DataItem, cluster: ClusterView, ctx=None) -> Decision:
         self.observe_item(item)
         by_free = self._live_sorted(cluster, cluster.free_mb)
         L = len(by_free)
         if L < 3:  # Alg. 1 needs K>=2 and P>=1
             return Decision(None, 0, "fewer than 3 live nodes")
-        fail_all = cluster.fail_probs(item.delta_t_days)
+        fail_all = self._fail_probs(cluster, item, ctx)
         free = cluster.free_mb
         f_avg = float(free[by_free].mean())  # line 1
         # |F(S_j) - F_avg| for every node once; penalties for out-of-mapping
         # nodes are suffix sums over the sorted order (mapping is a prefix).
         dev = np.abs(free[by_free] - f_avg)
         suffix = np.concatenate([np.cumsum(dev[::-1])[::-1], [0.0]])
+        # One frontier answers the (prefix, parity) feasibility question for
+        # every (K, P) pair: CDF_n(p) >= RT  <=>  min_parity(n) <= p.
+        frontier = self._frontier(
+            fail_all[by_free], item.reliability_target, ctx
+        )
 
         considered = 0
         for p in range(1, L):  # line 5
             min_bp = math.inf
             min_k = -1
-            # Incremental DP over the prefix (mapping = first K+P nodes).
-            dp = np.zeros(L + 1, dtype=np.float64)
-            dp[0] = 1.0
-            # preload first (2 + p - 1) nodes minus one; we advance as K grows
-            n_loaded = 0
             for k in range(2, L - p + 1):  # line 6
                 n = k + p
-                while n_loaded < n:
-                    pi = fail_all[by_free[n_loaded]]
-                    dp[1 : n_loaded + 2] = (
-                        dp[1 : n_loaded + 2] * (1.0 - pi) + dp[: n_loaded + 1] * pi
-                    )
-                    dp[0] *= 1.0 - pi
-                    n_loaded += 1
                 considered += 1
-                avail = float(np.minimum(np.cumsum(dp[: n + 1]), 1.0)[p])
-                if avail < item.reliability_target:
+                mp = frontier.min_parity(n)
+                if mp < 0 or mp > p:
                     continue
                 chunk = item.size_mb / k
                 mapping = by_free[:n]
@@ -280,16 +321,7 @@ def saturation_score(projected_used_mb, capacity_mb, smin_mb, n_nodes: int = 10)
     return np.clip(inv_l * np.exp(math.log(max(2, n_nodes)) * u), 0.0, 1.0)
 
 
-@dataclasses.dataclass
-class _Candidate:
-    k: int
-    p: int
-    node_ids: tuple
-    duration: float
-    storage: float
-    saturation: float
-
-
+@register_scheduler("drex_sc", adaptive=True, supports_parity_growth=True)
 class DRexSC(Scheduler):
     """System-capacity-aware scheduler (Alg. 2): Pareto front over
     {duration, storage, saturation} with saturation-weighted scoring."""
@@ -300,17 +332,23 @@ class DRexSC(Scheduler):
     def __init__(self, time_model: ECTimeModel | None = None):
         self.time_model = time_model or ECTimeModel()
 
-    def place(self, item: DataItem, cluster: ClusterView) -> Decision:
+    def place(self, item: DataItem, cluster: ClusterView, ctx=None) -> Decision:
         self.observe_item(item)
         by_free = self._live_sorted(cluster, cluster.free_mb)  # line 1
         L = len(by_free)
         if L < 2:
             return Decision(None, 0, "fewer than 2 live nodes")
-        fail_all = cluster.fail_probs(item.delta_t_days)
-        free = cluster.free_mb
-        cap = cluster.capacity_mb
+        fail_all = self._fail_probs(cluster, item, ctx)
+        fail_sorted = fail_all[by_free]
+        free_sorted = cluster.free_mb[by_free]
+        wb_sorted = cluster.write_bw[by_free]
+        rb_sorted = cluster.read_bw[by_free]
+        used_sorted = cluster.used_mb[by_free]
+        cap_sorted = cluster.capacity_mb[by_free]
         used = cluster.used_mb
+        cap = cluster.capacity_mb
         smin = self.smin_mb
+        size = item.size_mb
         live = cluster.live_ids()
         # Saturation baseline over every live node; candidates add only the
         # delta of their mapped nodes (+chunk), so — like D-Rex LB's
@@ -319,62 +357,74 @@ class DRexSC(Scheduler):
         # its limit.
         f_base = saturation_score(used[live], cap[live], smin, L)
         f_base_sum = float(f_base.sum())
+        tm = self.time_model
 
-        candidates: list[_Candidate] = []
+        # Candidate windows as parallel arrays ((s, n) identifies the
+        # mapping; only the winner's node tuple is ever materialized).
+        cand_cols: list[np.ndarray] = []
         considered = 0
+        budget = self.MAX_MAPPINGS
         # line 2: first 2^10 contiguous windows of the sorted order, windows
         # expanding from each start: [0:2],[0:3],...,[0:L],[1:3],...
-        n_windows = 0
+        # The window [s:e] is a prefix of the suffix starting at s, so one
+        # lazily-extended ParityFrontier per start answers every window;
+        # all windows sharing a start are then scored vectorized.
         for s in range(L - 1):
-            if n_windows >= self.MAX_MAPPINGS:
+            if budget <= 0:
                 break
-            dp = np.zeros(L + 1, dtype=np.float64)
-            dp[0] = 1.0
-            n_loaded = 0
-            for e in range(s + 2, L + 1):
-                if n_windows >= self.MAX_MAPPINGS:
-                    break
-                n_windows += 1
-                while n_loaded < e - s:
-                    pi = fail_all[by_free[s + n_loaded]]
-                    dp[1 : n_loaded + 2] = (
-                        dp[1 : n_loaded + 2] * (1.0 - pi) + dp[: n_loaded + 1] * pi
-                    )
-                    dp[0] *= 1.0 - pi
-                    n_loaded += 1
-                n = e - s
-                considered += 1
-                cdf = np.minimum(np.cumsum(dp[: n + 1]), 1.0)
-                feas = np.nonzero(cdf[:n] >= item.reliability_target)[0]
-                if feas.size == 0:
-                    continue
-                p_star = max(1, int(feas[0]))  # line 4: min storage == max K
-                k = n - p_star
-                if k < 1:
-                    continue
-                chunk = item.size_mb / k
-                mapping = by_free[s:e]
-                if not self._fits(cluster, mapping, chunk):
-                    continue
-                tm = self.time_model
-                duration = (
-                    chunk / float(cluster.write_bw[mapping].min())
-                    + chunk / float(cluster.read_bw[mapping].min())
-                    + tm.t_encode(n, k, item.size_mb)
-                    + tm.t_decode(k, item.size_mb)
-                )  # line 6
-                storage = chunk * n  # line 7
-                sat = f_base_sum + float(
-                    (
-                        saturation_score(used[mapping] + chunk, cap[mapping], smin, L)
-                        - saturation_score(used[mapping], cap[mapping], smin, L)
-                    ).sum()
-                )  # line 8
-                candidates.append(
-                    _Candidate(k, p_star, tuple(int(x) for x in mapping), duration, storage, sat)
+            n_wins = min(L - s - 1, budget)   # windows e in [s+2, s+2+n_wins)
+            budget -= n_wins
+            considered += n_wins
+            nmax = n_wins + 1                 # largest prefix length probed
+            frontier = self._frontier(
+                fail_sorted[s:], item.reliability_target, ctx
+            )
+            fr = frontier.upto(nmax)
+            n_arr = np.arange(2, nmax + 1)
+            mp = fr[1:nmax]                   # min parity for n = 2..nmax
+            p_star = np.maximum(1, mp)        # line 4: min storage == max K
+            k = n_arr - p_star
+            valid = (mp >= 0) & (k >= 1)
+            if not np.any(valid):
+                continue
+            k_safe = np.where(valid, k, 1)
+            chunk = size / k_safe
+            # Capacity: mapping is sorted by free desc, so the window min
+            # is its last node.
+            valid &= free_sorted[s + n_arr - 1] >= chunk
+            if not np.any(valid):
+                continue
+            wb_min = np.minimum.accumulate(wb_sorted[s : s + nmax])[n_arr - 1]
+            rb_min = np.minimum.accumulate(rb_sorted[s : s + nmax])[n_arr - 1]
+            enc = tm.t_encode_many(n_arr, k_safe, size)
+            dec = tm.t_decode_many(k_safe, size)
+            duration = chunk / wb_min + chunk / rb_min + enc + dec  # line 6
+            storage = chunk * n_arr  # line 7
+            # line 8: per-window saturation delta of the mapped prefix.
+            u = used_sorted[s : s + nmax]
+            c = cap_sorted[s : s + nmax]
+            delta = saturation_score(
+                u[None, :] + chunk[:, None], c[None, :], smin, L
+            ) - saturation_score(u, c, smin, L)[None, :]
+            in_window = np.arange(nmax)[None, :] < n_arr[:, None]
+            sat = f_base_sum + (delta * in_window).sum(axis=1)
+            cand_cols.append(
+                np.stack(
+                    [
+                        np.full(int(valid.sum()), float(s)),
+                        n_arr[valid].astype(np.float64),
+                        k[valid].astype(np.float64),
+                        p_star[valid].astype(np.float64),
+                        duration[valid],
+                        storage[valid],
+                        sat[valid],
+                    ],
+                    axis=1,
                 )
-        if not candidates:
+            )
+        if not cand_cols:
             return Decision(None, considered, "no mapping satisfies reliability+capacity")
+        cands = np.concatenate(cand_cols, axis=0)  # (m, 7); every block non-empty
 
         # line 11: system saturation over the whole repository.
         sys_sat = float(
@@ -383,17 +433,22 @@ class DRexSC(Scheduler):
             )[0]
         )
 
-        front = _pareto_front(candidates)
-        d = np.array([c.duration for c in front])
-        st = np.array([c.storage for c in front])
-        sa = np.array([c.saturation for c in front])
-        dur_prog = _progress(d)
-        sto_prog = _progress(st)
-        sat_prog = _progress(sa)
+        objectives = cands[:, 4:7]  # (duration, storage, saturation)
+        front = cands[_pareto_front(objectives)]
+        dur_prog = _progress(front[:, 4])
+        sto_prog = _progress(front[:, 5])
+        sat_prog = _progress(front[:, 6])
         score = (1.0 - sys_sat) * dur_prog + (sto_prog + sat_prog) / 2.0  # line 17
         best = front[int(np.argmax(score))]
+        s_best, n_best = int(best[0]), int(best[1])
         return Decision(
-            Placement(k=best.k, p=best.p, node_ids=best.node_ids), considered, ""
+            Placement(
+                k=int(best[2]),
+                p=int(best[3]),
+                node_ids=tuple(int(x) for x in by_free[s_best : s_best + n_best]),
+            ),
+            considered,
+            "",
         )
 
 
@@ -406,19 +461,23 @@ def _progress(vals: np.ndarray) -> np.ndarray:
     return (hi - vals) / (hi - lo)
 
 
-def _pareto_front(cands: Sequence[_Candidate]) -> list[_Candidate]:
-    """Minimizing front over (duration, storage, saturation); O(n^2) with
-    n <= 1024 candidate mappings."""
-    arr = np.array([[c.duration, c.storage, c.saturation] for c in cands])
-    n = arr.shape[0]
-    keep = np.ones(n, dtype=bool)
-    for i in range(n):
-        # i is dominated iff some j is <= on every objective and < on one.
-        dominates_i = np.all(arr <= arr[i], axis=1) & np.any(arr < arr[i], axis=1)
-        if np.any(dominates_i):
-            keep[i] = False
-    front = [c for c, k in zip(cands, keep) if k]
-    return front if front else list(cands)
+def _pareto_front(objectives: np.ndarray) -> np.ndarray:
+    """Keep-mask of the minimizing front over an (m, d) objective matrix;
+    one broadcasted pairwise comparison with m <= 1024 candidates."""
+    # i is dominated iff some j is <= on every objective and < on one:
+    # le[i, j] = all_k arr[j, k] <= arr[i, k]; lt[i, j] = any_k <.
+    # Built per objective in 2-D (m x m) to avoid the (m, m, d) temporary.
+    m, d = objectives.shape
+    le = np.ones((m, m), dtype=bool)
+    lt = np.zeros((m, m), dtype=bool)
+    for col in range(d):
+        c = objectives[:, col]
+        le &= c[None, :] <= c[:, None]
+        lt |= c[None, :] < c[:, None]
+    keep = ~np.any(le & lt, axis=1)
+    if not np.any(keep):  # defensive — exact ties are never "dominated"
+        keep[:] = True
+    return keep
 
 
 # ---------------------------------------------------------------------------
@@ -426,6 +485,7 @@ def _pareto_front(cands: Sequence[_Candidate]) -> list[_Candidate]:
 # ---------------------------------------------------------------------------
 
 
+@register_scheduler_family(r"ec\(\s*(\d+)\s*,\s*(\d+)\s*\)")
 class StaticEC(Scheduler):
     """Algorithm 3: fixed (K, P); first K+P fitting nodes by write BW."""
 
@@ -434,7 +494,7 @@ class StaticEC(Scheduler):
         self.p = p
         self.name = f"ec({k},{p})"
 
-    def place(self, item: DataItem, cluster: ClusterView) -> Decision:
+    def place(self, item: DataItem, cluster: ClusterView, ctx=None) -> Decision:
         self.observe_item(item)
         by_bw = self._live_sorted(cluster, cluster.write_bw)  # line 2
         n = self.k + self.p
@@ -443,9 +503,11 @@ class StaticEC(Scheduler):
         if len(fitting) < n:
             return Decision(None, 1, "not enough nodes with capacity")
         mapping = tuple(fitting[:n])
-        fail = cluster.fail_probs(item.delta_t_days)[list(mapping)]
-        mp = min_parity_for_target(fail, item.reliability_target)
-        if mp is None or mp > self.p:
+        fail_all = self._fail_probs(cluster, item, ctx)
+        mp = self._min_parity(
+            fail_all[list(mapping)], item.reliability_target, ctx
+        )
+        if mp < 0 or mp > self.p:
             return Decision(None, 1, "fixed (K,P) cannot meet reliability target")
         return Decision(Placement(k=self.k, p=self.p, node_ids=mapping), 1, "")
 
@@ -455,6 +517,7 @@ class StaticEC(Scheduler):
 # ---------------------------------------------------------------------------
 
 
+@register_scheduler("daos", adaptive=True)
 class DAOSAdaptive(Scheduler):
     """Pick, among DAOS's predefined configs, the one meeting the
     reliability target with the lowest storage overhead (paper §5.2.2).
@@ -466,10 +529,10 @@ class DAOSAdaptive(Scheduler):
     # (K, P), ordered by storage overhead N/K ascending:
     CONFIGS = [(8, 1), (8, 2), (4, 1), (4, 2), (1, 1), (1, 3), (1, 5)]
 
-    def place(self, item: DataItem, cluster: ClusterView) -> Decision:
+    def place(self, item: DataItem, cluster: ClusterView, ctx=None) -> Decision:
         self.observe_item(item)
         by_bw = self._live_sorted(cluster, cluster.write_bw)
-        fail_all = cluster.fail_probs(item.delta_t_days)
+        fail_all = self._fail_probs(cluster, item, ctx)
         considered = 0
         for k, p in sorted(self.CONFIGS, key=lambda kp: (kp[0] + kp[1]) / kp[0]):
             considered += 1
@@ -479,8 +542,10 @@ class DAOSAdaptive(Scheduler):
             if len(fitting) < n:
                 continue
             mapping = tuple(fitting[:n])
-            mp = min_parity_for_target(fail_all[list(mapping)], item.reliability_target)
-            if mp is None or mp > p:
+            mp = self._min_parity(
+                fail_all[list(mapping)], item.reliability_target, ctx
+            )
+            if mp < 0 or mp > p:
                 continue
             return Decision(Placement(k=k, p=p, node_ids=mapping), considered, "")
         return Decision(None, considered, "no DAOS config meets target")
@@ -491,27 +556,41 @@ class DAOSAdaptive(Scheduler):
 # ---------------------------------------------------------------------------
 
 
+@register_scheduler("random_spread", randomized=True)
 class RandomSpread(Scheduler):
     """Uniformly random feasible mapping with HDFS-style EC(6,3); control
-    baseline for ablations (not in the paper)."""
+    baseline for ablations (not in the paper).
+
+    RNG state: the mapping for an item is drawn from a generator seeded
+    with ``(seed, item_id)``, so ``place`` is a pure function of
+    ``(seed, item, cluster)`` — repeated calls for the same item return
+    the same mapping, and batched ``place_many`` matches sequential
+    ``place`` exactly (no generator state threaded between calls).
+    """
 
     name = "random_spread"
 
     def __init__(self, k: int = 6, p: int = 3, seed: int = 0):
         self.k, self.p = k, p
-        self.rng = np.random.default_rng(seed)
+        self.seed = seed
 
-    def place(self, item: DataItem, cluster: ClusterView) -> Decision:
+    def place(self, item: DataItem, cluster: ClusterView, ctx=None) -> Decision:
         self.observe_item(item)
         n = self.k + self.p
         chunk = item.size_mb / self.k
         ids = [int(i) for i in cluster.live_ids() if cluster.free_mb[i] >= chunk]
         if len(ids) < n:
             return Decision(None, 1, "not enough nodes with capacity")
-        mapping = tuple(int(x) for x in self.rng.choice(ids, size=n, replace=False))
-        fail = cluster.fail_probs(item.delta_t_days)[list(mapping)]
-        mp = min_parity_for_target(fail, item.reliability_target)
-        if mp is None or mp > self.p:
+        # Mask to non-negative 64-bit words: default_rng rejects negative
+        # entropy, and DataItem does not forbid sentinel/negative ids.
+        mask = (1 << 64) - 1
+        rng = np.random.default_rng((self.seed & mask, item.item_id & mask))
+        mapping = tuple(int(x) for x in rng.choice(ids, size=n, replace=False))
+        fail_all = self._fail_probs(cluster, item, ctx)
+        mp = self._min_parity(
+            fail_all[list(mapping)], item.reliability_target, ctx
+        )
+        if mp < 0 or mp > self.p:
             return Decision(None, 1, "fixed (K,P) cannot meet reliability target")
         return Decision(Placement(k=self.k, p=self.p, node_ids=mapping), 1, "")
 
@@ -519,6 +598,7 @@ class RandomSpread(Scheduler):
 # ---------------------------------------------------------------------------
 
 
+#: Canonical paper ordering (the 9 algorithms every benchmark sweeps).
 SCHEDULER_NAMES = [
     "drex_sc",
     "drex_lb",
@@ -531,23 +611,13 @@ SCHEDULER_NAMES = [
     "random_spread",
 ]
 
+# Materialize the paper's static-EC configs in the registry so
+# ``scheduler_names()`` lists all nine out of the box.
+for _name in SCHEDULER_NAMES:
+    get_spec(_name)
+
 
 def make_scheduler(name: str, **kwargs) -> Scheduler:
-    """Factory over every algorithm in the paper (+ controls)."""
-    name = name.lower()
-    if name == "greedy_min_storage":
-        return GreedyMinStorage()
-    if name == "greedy_least_used":
-        return GreedyLeastUsed()
-    if name == "drex_lb":
-        return DRexLB()
-    if name == "drex_sc":
-        return DRexSC(**kwargs)
-    if name.startswith("ec(") and name.endswith(")"):
-        k, p = (int(x) for x in name[3:-1].split(","))
-        return StaticEC(k, p)
-    if name == "daos":
-        return DAOSAdaptive()
-    if name == "random_spread":
-        return RandomSpread(**kwargs)
-    raise ValueError(f"unknown scheduler {name!r}; known: {SCHEDULER_NAMES}")
+    """Deprecated shim for the old factory; use
+    :func:`repro.core.registry.create_scheduler` (same semantics)."""
+    return create_scheduler(name, **kwargs)

@@ -1,0 +1,324 @@
+"""Placement engine: the one entry point through which items get placed.
+
+The engine owns a :class:`ClusterView`, runs a registered scheduler over
+it, commits accepted placements, and emits structured per-decision
+telemetry (:class:`PlacementRecord`).  It adds the two things the bare
+``Scheduler.place`` call sites (simulator, checkpoint manager,
+benchmarks) each reimplemented ad hoc:
+
+* **commit/rollback** — ``place`` commits the chunk bytes to the view
+  (optional); :meth:`PlacementEngine.snapshot` /
+  :meth:`PlacementEngine.rollback` restore the view exactly, and
+  ``place_many(..., atomic=True)`` rolls the whole batch back if any
+  item is rejected.
+* **batched placement** — :meth:`PlacementEngine.place_many` threads a
+  shared :class:`BatchContext` through the scheduler so pure derived
+  quantities (failure probabilities per retention window, Poisson-
+  binomial parity frontiers per sorted node sequence) are computed once
+  per batch instead of once per item.  Caches key on the *exact inputs*
+  of each computation, so batched placements are bit-identical to
+  sequential ``place`` calls — the DP cost of D-Rex SC simply amortizes
+  whenever consecutive items see an unchanged sort order.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .registry import create_scheduler, scheduler_capabilities
+from .reliability import min_parity_for_target, ParityFrontier
+from .types import ClusterView, DataItem, Placement, StorageNode
+
+__all__ = [
+    "BatchContext",
+    "PlacementRecord",
+    "PlacementEngine",
+    "batch_stats",
+]
+
+
+class BatchContext:
+    """Memoization scope shared by the items of one batch.
+
+    All caches key on the exact content of their inputs (byte-hashed
+    arrays + scalars), never on cluster identity or time, so a cache hit
+    returns precisely what recomputation would — schedulers may consult
+    the context freely without changing their decisions.  The context
+    assumes node failure *rates* are constant while it lives (occupancy
+    and liveness may change freely); discard it if AFRs are edited.
+    """
+
+    #: default bound on cached entries per cache; content keys churn with
+    #: cluster occupancy, so a long-lived context (e.g. the simulator's
+    #: run-long one) would otherwise grow without bound over large traces.
+    MAX_ENTRIES = 4096
+
+    def __init__(self, max_entries: int | None = None):
+        self.max_entries = self.MAX_ENTRIES if max_entries is None else max_entries
+        self._fail_probs: dict[tuple[float, bytes], np.ndarray] = {}
+        self._frontiers: dict[tuple[bytes, float], ParityFrontier] = {}
+        self._min_parity: dict[tuple[bytes, float], int] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def _bound(self, cache: dict) -> None:
+        # Plain clear-on-full: memoization is pure, so dropping entries
+        # only costs recomputation, never correctness.
+        if len(cache) >= self.max_entries:
+            cache.clear()
+
+    def fail_probs(self, cluster: ClusterView, delta_t_days: float) -> np.ndarray:
+        """Per-node failure probabilities for one retention window.
+
+        Keyed on the AFR content as well as the window, so a context
+        accidentally shared across engines/clusters stays correct."""
+        key = (float(delta_t_days), cluster.afr.tobytes())
+        fp = self._fail_probs.get(key)
+        if fp is None:
+            self.misses += 1
+            fp = cluster.fail_probs(delta_t_days)
+            self._bound(self._fail_probs)
+            self._fail_probs[key] = fp
+        else:
+            self.hits += 1
+        return fp
+
+    def frontier(self, sorted_fail_probs: np.ndarray, target: float) -> ParityFrontier:
+        """Shared lazily-extended parity frontier for one node sequence."""
+        key = (sorted_fail_probs.tobytes(), float(target))
+        fr = self._frontiers.get(key)
+        if fr is None:
+            self.misses += 1
+            fr = ParityFrontier(sorted_fail_probs, target)
+            self._bound(self._frontiers)
+            self._frontiers[key] = fr
+        else:
+            self.hits += 1
+        return fr
+
+    def min_parity(self, fail_probs: np.ndarray, target: float) -> int:
+        """Min parity for an arbitrary mapping; -1 if infeasible."""
+        key = (np.ascontiguousarray(fail_probs).tobytes(), float(target))
+        mp = self._min_parity.get(key)
+        if mp is None:
+            self.misses += 1
+            got = min_parity_for_target(fail_probs, target)
+            mp = -1 if got is None else int(got)
+            self._bound(self._min_parity)
+            self._min_parity[key] = mp
+        else:
+            self.hits += 1
+        return mp
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementRecord:
+    """Structured telemetry for one scheduling decision."""
+
+    item_id: int
+    placement: Optional[Placement]     # None => rejected
+    chunk_mb: float                    # 0.0 when rejected
+    candidates_considered: int
+    reason: str                        # "" on success
+    overhead_s: float                  # scheduler wall time for this item
+    committed: bool                    # True iff bytes were committed
+
+    @property
+    def ok(self) -> bool:
+        return self.placement is not None
+
+
+class PlacementEngine:
+    """Runs one scheduler against one :class:`ClusterView`.
+
+    ``scheduler`` may be a registered name (resolved through the
+    registry) or an instance; ``cluster`` may be a view or a node list.
+    With ``auto_commit=True`` (default) accepted placements are committed
+    to the view; the checkpoint plane runs with ``auto_commit=False``
+    because its fabric accounts for the bytes as chunks actually land.
+    """
+
+    def __init__(
+        self,
+        cluster: ClusterView | Sequence[StorageNode],
+        scheduler,
+        *,
+        auto_commit: bool = True,
+        **scheduler_kwargs,
+    ):
+        if isinstance(scheduler, str):
+            scheduler = create_scheduler(scheduler, **scheduler_kwargs)
+        elif scheduler_kwargs:
+            raise TypeError("scheduler kwargs only apply to name resolution")
+        if not isinstance(cluster, ClusterView):
+            cluster = ClusterView.from_nodes(list(cluster))
+        self.cluster = cluster
+        self.scheduler = scheduler
+        self.auto_commit = auto_commit
+        self.capabilities = scheduler_capabilities(scheduler)
+        # Legacy third-party schedulers may still implement the two-arg
+        # ``place(item, cluster)``; detect once and call accordingly.
+        try:
+            sig = inspect.signature(scheduler.place)
+            self._pass_ctx = "ctx" in sig.parameters or any(
+                p.kind is inspect.Parameter.VAR_KEYWORD
+                for p in sig.parameters.values()
+            )
+        except (TypeError, ValueError):  # builtins / C callables
+            self._pass_ctx = False
+        self.stats = {
+            "n_placed": 0,
+            "n_rejected": 0,
+            "mb_committed": 0.0,
+            "overhead_s": 0.0,
+        }
+
+    # -- placement ----------------------------------------------------------
+
+    def place(self, item: DataItem, *, ctx: BatchContext | None = None) -> PlacementRecord:
+        """Schedule (and, with ``auto_commit``, commit) one item."""
+        t0 = time.perf_counter()
+        if self._pass_ctx:
+            decision = self.scheduler.place(item, self.cluster, ctx=ctx)
+        else:
+            decision = self.scheduler.place(item, self.cluster)
+        overhead = time.perf_counter() - t0
+        self.stats["overhead_s"] += overhead
+        if decision.placement is None:
+            self.stats["n_rejected"] += 1
+            return PlacementRecord(
+                item_id=item.item_id,
+                placement=None,
+                chunk_mb=0.0,
+                candidates_considered=decision.candidates_considered,
+                reason=decision.reason or "rejected",
+                overhead_s=overhead,
+                committed=False,
+            )
+        pl = decision.placement
+        chunk = pl.chunk_size_mb(item.size_mb)
+        self._validate(pl, chunk)
+        committed = False
+        if self.auto_commit:
+            self.cluster.commit(pl, chunk)
+            self.stats["mb_committed"] += chunk * pl.n
+            committed = True
+        self.stats["n_placed"] += 1
+        return PlacementRecord(
+            item_id=item.item_id,
+            placement=pl,
+            chunk_mb=chunk,
+            candidates_considered=decision.candidates_considered,
+            reason="",
+            overhead_s=overhead,
+            committed=committed,
+        )
+
+    def place_many(
+        self,
+        items: Sequence[DataItem],
+        *,
+        atomic: bool = False,
+        ctx: BatchContext | None = None,
+    ) -> list[PlacementRecord]:
+        """Place a batch in arrival order under one shared context.
+
+        Decisions are identical to calling :meth:`place` per item (the
+        context only memoizes pure computations), but the reliability-DP
+        cost amortizes across the batch.  With ``atomic=True`` the whole
+        batch is rolled back if any item is rejected (records then carry
+        ``committed=False``).
+        """
+        ctx = ctx or BatchContext()
+        snap = self.snapshot()
+        records: list[PlacementRecord] = []
+        try:
+            for item in items:
+                records.append(self.place(item, ctx=ctx))
+        except Exception:
+            self.rollback(snap)
+            raise
+        if atomic and not all(r.ok for r in records):
+            self.rollback(snap)
+            records = [dataclasses.replace(r, committed=False) for r in records]
+        return records
+
+    # -- commit / rollback ----------------------------------------------------
+
+    def snapshot(self) -> tuple[np.ndarray, np.ndarray, dict, float]:
+        """Capture the mutable engine state (occupancy, liveness, stats,
+        and the scheduler's observed min item size)."""
+        return (
+            self.cluster.used_mb.copy(),
+            self.cluster.alive.copy(),
+            dict(self.stats),
+            float(getattr(self.scheduler, "smin_mb", 1.0)),
+        )
+
+    def rollback(self, snapshot: tuple[np.ndarray, np.ndarray, dict, float]) -> None:
+        """Restore a :meth:`snapshot` exactly (bitwise, not arithmetically).
+        A rolled-back batch leaves no trace: telemetry counters and the
+        scheduler's ``smin_mb`` observation (which feeds D-Rex SC's
+        saturation curve) are restored along with the cluster."""
+        used, alive, stats, smin = snapshot
+        self.cluster.used_mb[:] = used
+        self.cluster.alive[:] = alive
+        self.stats = dict(stats)
+        if hasattr(self.scheduler, "smin_mb"):
+            self.scheduler.smin_mb = smin
+
+    def release(self, record: PlacementRecord) -> None:
+        """Return one committed placement's bytes to the cluster (and to
+        ``stats['mb_committed']``).
+
+        ``stats['mb_committed']`` counts bytes committed *through this
+        engine* (net of release/rollback); it is not a live occupancy
+        gauge — callers that mutate the view directly (e.g. the
+        simulator's failure/drop paths) should read ``cluster.used_mb``
+        for current occupancy."""
+        if record.committed and record.placement is not None:
+            self.cluster.release(record.placement.node_ids, record.chunk_mb)
+            self.stats["mb_committed"] -= record.chunk_mb * record.placement.n
+
+    # -- internal -------------------------------------------------------------
+
+    def _validate(self, pl: Placement, chunk: float) -> None:
+        ids = np.asarray(pl.node_ids)
+        if not np.all(self.cluster.alive[ids]):
+            raise RuntimeError(
+                f"{self.scheduler.name} placed on a dead node: {pl.node_ids}"
+            )
+        if not np.all(self.cluster.free_mb[ids] >= chunk - 1e-6):
+            raise RuntimeError(
+                f"{self.scheduler.name} violated capacity ({chunk:.3f} MB chunk)"
+            )
+
+
+def batch_stats(records: Sequence[PlacementRecord]) -> dict:
+    """Aggregate a batch of records into the summary benchmarks report."""
+    ok = [r for r in records if r.ok]
+    rejected = [r for r in records if not r.ok]
+    reasons: dict[str, int] = {}
+    for r in rejected:
+        reasons[r.reason] = reasons.get(r.reason, 0) + 1
+    return {
+        "n_items": len(records),
+        "n_placed": len(ok),
+        "n_rejected": len(rejected),
+        "mb_placed": float(sum(r.chunk_mb * r.placement.n for r in ok)),
+        "mb_committed": float(
+            sum(r.chunk_mb * r.placement.n for r in ok if r.committed)
+        ),
+        "overhead_s": float(sum(r.overhead_s for r in records)),
+        "overhead_per_item_ms": (
+            1e3 * sum(r.overhead_s for r in records) / len(records)
+            if records
+            else 0.0
+        ),
+        "reject_reasons": reasons,
+    }

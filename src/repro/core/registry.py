@@ -1,0 +1,183 @@
+"""Scheduler registry: declarative registration + capability flags.
+
+Every placement algorithm registers itself under its paper name with a
+:class:`SchedulerCapabilities` declaration, replacing the old
+``make_scheduler`` if-chain and the name-string matching the simulator
+used to decide which schedulers may grow parity on reschedule
+(``Simulator._dynamic()``).  Callers resolve algorithms through
+:func:`create_scheduler` / :func:`get_spec`; parameterized families
+(``ec(K,P)``) register a regex pattern once and any concrete
+instantiation resolves on demand.
+
+Usage::
+
+    @register_scheduler("drex_lb", adaptive=True, supports_parity_growth=True)
+    class DRexLB(Scheduler): ...
+
+    @register_scheduler_family(r"ec\\((\\d+),(\\d+)\\)")
+    class StaticEC(Scheduler):
+        def __init__(self, k: int, p: int): ...
+
+    sched = create_scheduler("ec(6,3)")
+    get_spec("drex_lb").capabilities.supports_parity_growth  # True
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import inspect
+import re
+from typing import Callable, Optional
+
+__all__ = [
+    "SchedulerCapabilities",
+    "SchedulerSpec",
+    "register_scheduler",
+    "register_scheduler_family",
+    "create_scheduler",
+    "get_spec",
+    "scheduler_names",
+    "scheduler_capabilities",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerCapabilities:
+    """What a scheduler declares about itself (consumed by the simulator,
+    the checkpoint manager and the benchmarks instead of name matching)."""
+
+    #: chooses (K, P) per item instead of a fixed code.
+    adaptive: bool = False
+    #: may add parity chunks when rescheduling after node failures (§5.7).
+    supports_parity_growth: bool = False
+    #: placement depends on an RNG seed (mapping not a pure function of
+    #: the cluster state alone).
+    randomized: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerSpec:
+    name: str
+    factory: Callable
+    capabilities: SchedulerCapabilities
+    doc: str = ""
+
+
+_REGISTRY: dict[str, SchedulerSpec] = {}
+_FAMILIES: list[tuple[re.Pattern, Callable, SchedulerCapabilities, str]] = []
+
+
+def register_scheduler(
+    name: str,
+    *,
+    adaptive: bool = False,
+    supports_parity_growth: bool = False,
+    randomized: bool = False,
+    doc: str = "",
+):
+    """Class/factory decorator adding one named algorithm to the registry.
+
+    The capability record is also attached to the factory as
+    ``.capabilities`` so instances can be interrogated directly
+    (``scheduler.capabilities.supports_parity_growth``).
+    """
+    caps = SchedulerCapabilities(
+        adaptive=adaptive,
+        supports_parity_growth=supports_parity_growth,
+        randomized=randomized,
+    )
+
+    def deco(factory):
+        key = name.lower()
+        # Latest registration wins: re-decorating the same name (module
+        # reload, test fixtures) stays idempotent instead of raising.
+        _REGISTRY[key] = SchedulerSpec(
+            key, factory, caps, doc or inspect.getdoc(factory) or ""
+        )
+        try:
+            factory.capabilities = caps
+        except (AttributeError, TypeError):  # e.g. functools.partial
+            pass
+        return factory
+
+    return deco
+
+
+def register_scheduler_family(
+    pattern: str,
+    *,
+    adaptive: bool = False,
+    supports_parity_growth: bool = False,
+    randomized: bool = False,
+    doc: str = "",
+):
+    """Register a parameterized family, e.g. ``ec(K,P)``.
+
+    ``pattern`` is a regex whose groups are passed to the factory as int
+    positional arguments; any name fully matching it resolves (and is
+    memoized into the registry so it appears in :func:`scheduler_names`).
+    """
+    caps = SchedulerCapabilities(
+        adaptive=adaptive,
+        supports_parity_growth=supports_parity_growth,
+        randomized=randomized,
+    )
+
+    def deco(factory):
+        _FAMILIES.append(
+            (re.compile(pattern), factory, caps, doc or inspect.getdoc(factory) or "")
+        )
+        try:
+            factory.capabilities = caps
+        except (AttributeError, TypeError):
+            pass
+        return factory
+
+    return deco
+
+
+def _resolve_family(name: str) -> Optional[SchedulerSpec]:
+    for rx, factory, caps, doc in _FAMILIES:
+        m = rx.fullmatch(name)
+        if m is None:
+            continue
+        args = tuple(int(g) for g in m.groups())
+        spec = SchedulerSpec(name, functools.partial(factory, *args), caps, doc)
+        _REGISTRY[name] = spec
+        return spec
+    return None
+
+
+def get_spec(name: str) -> SchedulerSpec:
+    """Look up a registered scheduler (or instantiate a family match).
+
+    Names are case- and whitespace-insensitive (``"EC(6, 3)"`` resolves
+    to ``ec(6,3)``, matching the old factory's tolerance)."""
+    key = "".join(name.lower().split())
+    spec = _REGISTRY.get(key) or _resolve_family(key)
+    if spec is None:
+        raise ValueError(
+            f"unknown scheduler {name!r}; registered: {scheduler_names()}"
+        )
+    return spec
+
+
+def create_scheduler(name: str, **kwargs):
+    """Instantiate a scheduler by registered name (the factory behind the
+    old ``make_scheduler``)."""
+    return get_spec(name).factory(**kwargs)
+
+
+def scheduler_names() -> list[str]:
+    """All names registered so far (family members appear once resolved)."""
+    return sorted(_REGISTRY)
+
+
+def scheduler_capabilities(scheduler) -> SchedulerCapabilities:
+    """Capabilities of a scheduler *instance*; permissive default for
+    unregistered third-party schedulers."""
+    caps = getattr(scheduler, "capabilities", None)
+    if isinstance(caps, SchedulerCapabilities):
+        return caps
+    return SchedulerCapabilities()

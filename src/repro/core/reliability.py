@@ -32,6 +32,8 @@ __all__ = [
     "batch_pr_avail_exact",
     "max_parity_needed",
     "min_parity_for_target",
+    "parity_frontier",
+    "ParityFrontier",
 ]
 
 _SQRT2PI = math.sqrt(2.0 * math.pi)
@@ -142,6 +144,78 @@ def meets_target(
     return pr_avail(node_fail_probs, parity, method=method) >= target
 
 
+class ParityFrontier:
+    """Incremental Poisson-binomial frontier over a *prefix-structured*
+    node sequence: for every prefix length ``n`` of ``fail_probs``, the
+    smallest parity ``P`` (in ``[0, n-1]``) whose availability CDF meets
+    ``target``, or ``-1`` if no such P exists.
+
+    This is the one DP the prefix-greedy schedulers (GreedyLeastUsed,
+    D-Rex LB, D-Rex SC windows) all need: they sort the live nodes once
+    and ask "what is the minimum parity for the first ``n`` nodes?" for
+    growing ``n``.  The DP state is shared across all prefixes and
+    extended lazily, so a scheduler that stops at ``n = 3`` pays
+    ``O(3^2)``, not ``O(L^2)`` — and a batch of items with an unchanged
+    sort order pays for the DP once (see
+    :meth:`repro.core.engine.BatchContext.frontier`).
+    """
+
+    __slots__ = ("probs", "target", "_dp", "_n", "_j", "_out")
+
+    def __init__(self, fail_probs, target: float):
+        self.probs = np.asarray(fail_probs, dtype=np.float64)
+        self.target = float(target)
+        self._dp = np.zeros(self.probs.shape[0] + 1, dtype=np.float64)
+        self._dp[0] = 1.0
+        self._n = 0
+        self._j = 0  # unbounded min parity of the current prefix
+        self._out = np.full(self.probs.shape[0], -1, dtype=np.int64)
+
+    def __len__(self) -> int:
+        return int(self.probs.shape[0])
+
+    def upto(self, n: int) -> np.ndarray:
+        """Extend the DP through prefix length ``n``; returns the frontier
+        array (entries past ``n`` are only valid once computed)."""
+        dp, out, probs, target = self._dp, self._out, self.probs, self.target
+        while self._n < n:
+            i = self._n
+            pi = probs[i]
+            dp[1 : i + 2] = dp[1 : i + 2] * (1.0 - pi) + dp[: i + 1] * pi
+            dp[0] *= 1.0 - pi
+            self._n = i + 1
+            # Adding a node can only lower the CDF at fixed P, so the min
+            # parity is weakly increasing in the prefix length: resume the
+            # scan from the previous prefix's value instead of a cumsum.
+            j = self._j
+            cdf = float(dp[: j + 1].sum())
+            while cdf < target and j <= i:
+                j += 1
+                cdf += float(dp[j])
+            self._j = j
+            if j <= i:  # P is capped at n-1 (at least one data chunk)
+                out[i] = j
+        return out
+
+    def min_parity(self, n: int) -> int:
+        """Min parity for the first ``n`` nodes; ``-1`` if infeasible."""
+        if n < 1 or n > len(self):
+            return -1
+        return int(self.upto(n)[n - 1])
+
+
+def parity_frontier(sorted_fail_probs, target: float) -> np.ndarray:
+    """Vectorized one-pass frontier: ``out[n-1]`` is the min parity for
+    the length-``n`` prefix of ``sorted_fail_probs`` (``-1`` infeasible).
+
+    One exact Poisson-binomial DP over the whole sequence answers the
+    feasibility question for *every* prefix — the primitive previously
+    re-derived inline by GreedyLeastUsed, D-Rex LB and D-Rex SC.
+    """
+    fr = ParityFrontier(sorted_fail_probs, target)
+    return fr.upto(len(fr)).copy()
+
+
 def min_parity_for_target(
     node_fail_probs: Sequence[float], target: float, method: Method = "auto"
 ) -> int | None:
@@ -149,7 +223,10 @@ def min_parity_for_target(
     P = N-1 (i.e. only one chunk must survive) is insufficient.
 
     Computes the DP once and reads off all CDF values, instead of one DP
-    per candidate P — O(N^2) total instead of O(N^3).
+    per candidate P — O(N^2) total instead of O(N^3).  (This is the
+    whole-sequence special case of :func:`parity_frontier`, kept one-shot
+    because non-prefix-structured callers never reuse intermediate
+    prefixes.)
     """
     p = np.asarray(node_fail_probs, dtype=np.float64)
     n = p.shape[0]
@@ -162,7 +239,7 @@ def min_parity_for_target(
             dp[1:] = dp[1:] * (1.0 - pi) + dp[:-1] * pi
             dp[0] *= 1.0 - pi
         cdf = np.cumsum(dp)
-        feas = np.nonzero(cdf[: n] >= target)[0]  # P can be at most n-1
+        feas = np.nonzero(cdf[:n] >= target)[0]  # P can be at most n-1
         return int(feas[0]) if feas.size else None
     for parity in range(n):
         if _rna_cdf(p, parity) >= target:

@@ -181,6 +181,28 @@ class ECTimeModel:
             return self.d0
         return self.d0 + self.d_byte * size_mb + self.d_mult * k * size_mb
 
+    # Elementwise variants over parallel (n, k) arrays — the ONLY other
+    # place the cost model's functional form lives; keep in lockstep with
+    # the scalar methods above (D-Rex SC scores all candidate windows
+    # through these).
+
+    def t_encode_many(self, n, k, size_mb: float):
+        n = np.asarray(n)
+        k = np.asarray(k)
+        return np.where(
+            k == 1,
+            self.e0,
+            self.e0 + self.e_byte * size_mb + self.e_mult * (n - k) * size_mb,
+        )
+
+    def t_decode_many(self, k, size_mb: float):
+        k = np.asarray(k)
+        return np.where(
+            k == 1,
+            self.d0,
+            self.d0 + self.d_byte * size_mb + self.d_mult * k * size_mb,
+        )
+
 
 @dataclasses.dataclass(frozen=True)
 class Decision:

@@ -4,24 +4,36 @@
 importing this module never touches jax device state; the dry-run sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
 import and only then calls it.
+
+``AxisType`` (explicit-sharding axis annotations) only exists on newer
+jax; on jax <= 0.4.x meshes carry no axis types and ``jax.make_mesh``
+does not accept the kwarg, so we fall back to plain meshes.
 """
 
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+import jax.sharding
+from jax.sharding import Mesh
+
+#: None on jax versions without explicit-sharding axis types (<= 0.4.x).
+AxisType = getattr(jax.sharding, "AxisType", None)
+
+
+def make_mesh_compat(shape, axes) -> Mesh:
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1) -> Mesh:
     """Small mesh over however many devices the host actually has (CPU
     tests / the runnable examples)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"), axis_types=(AxisType.Auto,) * 2
-    )
+    return make_mesh_compat((data, model), ("data", "model"))

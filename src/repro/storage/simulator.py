@@ -15,13 +15,13 @@ the read; encode/decode times come from the calibrated linear model
 from __future__ import annotations
 
 import dataclasses
-import time as _time
 from typing import Callable, Optional, Sequence
 
 import numpy as np
 
 from repro.core.algorithms import Scheduler
-from repro.core.reliability import min_parity_for_target
+from repro.core.engine import BatchContext, PlacementEngine
+from repro.core.registry import scheduler_capabilities
 from repro.core.types import ClusterView, DataItem, ECTimeModel, Placement, StorageNode
 
 __all__ = ["SimConfig", "SimResult", "StoredItem", "Simulator", "run_simulation"]
@@ -88,13 +88,19 @@ class Simulator:
     def __init__(
         self,
         nodes: Sequence[StorageNode],
-        scheduler: Scheduler,
+        scheduler: Scheduler | str,
         config: SimConfig | None = None,
     ):
         self.nodes = list(nodes)
-        self.scheduler = scheduler
         self.config = config or SimConfig()
-        self.cluster = ClusterView.from_nodes(self.nodes)
+        # The engine owns the view, commits placements, and measures
+        # per-decision overhead; the sim shares one BatchContext across
+        # the whole run (AFRs never change mid-simulation) so the
+        # reliability DP amortizes over the trace.
+        self.engine = PlacementEngine(ClusterView.from_nodes(self.nodes), scheduler)
+        self.scheduler = self.engine.scheduler
+        self.cluster = self.engine.cluster
+        self.ctx = BatchContext()
         self.rng = np.random.default_rng(self.config.seed)
         self.live_items: dict[int, StoredItem] = {}
         self.dropped_mb = 0.0
@@ -116,24 +122,16 @@ class Simulator:
         )
 
     def store(self, item: DataItem) -> tuple[Optional[StoredItem], float]:
-        t0 = _time.perf_counter()
-        decision = self.scheduler.place(item, self.cluster)
-        overhead = _time.perf_counter() - t0
-        if decision.placement is None:
-            return None, overhead
-        pl = decision.placement
-        chunk = pl.chunk_size_mb(item.size_mb)
-        # Defensive re-check of Problem 1's write-success constraints.
-        ids = list(pl.node_ids)
-        assert np.all(self.cluster.alive[ids]), "scheduler placed on dead node"
-        assert np.all(self.cluster.free_mb[ids] >= chunk - 1e-6), (
-            "scheduler violated capacity"
-        )
-        self.cluster.commit(pl, chunk)
+        # The engine re-checks Problem 1's write-success constraints and
+        # commits; record.overhead_s is the per-item latency of Table 2.
+        record = self.engine.place(item, ctx=self.ctx)
+        if record.placement is None:
+            return None, record.overhead_s
+        pl = record.placement
         te, td, tw, tr = self._io_times(item, pl)
-        si = StoredItem(item, pl, chunk, te, td, tw, tr)
+        si = StoredItem(item, pl, record.chunk_mb, te, td, tw, tr)
         self.live_items[item.item_id] = si
-        return si, overhead
+        return si, record.overhead_s
 
     # -- failure path (§5.7) --------------------------------------------------
 
@@ -180,9 +178,9 @@ class Simulator:
         added_parity = 0
         remaining = [c for c in candidates if c not in new_map]
         while True:
-            fail = self.cluster.fail_probs(item.delta_t_days)[new_map]
-            mp = min_parity_for_target(fail, item.reliability_target)
-            if mp is not None and mp <= pl.p + added_parity:
+            fail = self.ctx.fail_probs(self.cluster, item.delta_t_days)[new_map]
+            mp = self.ctx.min_parity(fail, item.reliability_target)
+            if 0 <= mp <= pl.p + added_parity:
                 break
             if not (self.config.allow_parity_growth and self._dynamic()) or not remaining:
                 self._drop(si)
@@ -198,12 +196,9 @@ class Simulator:
         )
 
     def _dynamic(self) -> bool:
-        return self.scheduler.name in (
-            "drex_sc",
-            "drex_lb",
-            "greedy_min_storage",
-            "greedy_least_used",
-        )
+        """Declared capability, not name matching (§5.7: only adaptive
+        D-Rex-style schedulers may buy extra parity when rescheduling)."""
+        return scheduler_capabilities(self.scheduler).supports_parity_growth
 
     def _drop(self, si: StoredItem) -> None:
         for n in si.placement.node_ids:
@@ -283,7 +278,7 @@ class Simulator:
 
 def run_simulation(
     nodes: Sequence[StorageNode],
-    scheduler: Scheduler,
+    scheduler: Scheduler | str,
     items: Sequence[DataItem],
     config: SimConfig | None = None,
 ) -> SimResult:

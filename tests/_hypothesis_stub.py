@@ -1,0 +1,139 @@
+"""Deterministic fallback for the optional `hypothesis` dev dependency.
+
+When `hypothesis` is installed (see requirements-dev.txt) the property
+tests use it directly; when it is missing, this stub re-implements the
+tiny subset of the API the test-suite uses (`given`, `settings`,
+`strategies.{floats,integers,lists,sampled_from}`) as a fixed-seed
+random sweep, so the invariants still execute instead of the whole
+module failing collection.
+
+Differences from real hypothesis, by design:
+
+* examples are drawn from a PRNG seeded by the test's qualified name —
+  fully deterministic run-to-run, no shrinking, no example database;
+* the number of examples is capped (default 25) to bound runtime;
+* boundary values (min/max) are drawn with elevated probability since
+  there is no coverage-guided search.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+_MAX_EXAMPLES_CAP = 30
+
+
+class _Strategy:
+    def draw(self, rng: np.random.Generator):
+        raise NotImplementedError
+
+
+class _Floats(_Strategy):
+    def __init__(self, lo: float, hi: float):
+        self.lo, self.hi = float(lo), float(hi)
+
+    def draw(self, rng):
+        r = rng.random()
+        if r < 0.05:
+            return self.lo
+        if r < 0.10:
+            return self.hi
+        return float(rng.uniform(self.lo, self.hi))
+
+
+class _Integers(_Strategy):
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = int(lo), int(hi)
+
+    def draw(self, rng):
+        r = rng.random()
+        if r < 0.05:
+            return self.lo
+        if r < 0.10:
+            return self.hi
+        return int(rng.integers(self.lo, self.hi + 1))
+
+
+class _Lists(_Strategy):
+    def __init__(self, elements: _Strategy, min_size: int, max_size: int):
+        self.elements = elements
+        self.min_size, self.max_size = int(min_size), int(max_size)
+
+    def draw(self, rng):
+        n = int(rng.integers(self.min_size, self.max_size + 1))
+        return [self.elements.draw(rng) for _ in range(n)]
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, seq):
+        self.seq = list(seq)
+
+    def draw(self, rng):
+        return self.seq[int(rng.integers(len(self.seq)))]
+
+
+class strategies:
+    """Namespace mirror of ``hypothesis.strategies``."""
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_):
+        return _Floats(min_value, max_value)
+
+    @staticmethod
+    def integers(min_value=0, max_value=1, **_):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10, **_):
+        return _Lists(elements, min_size, max_size)
+
+    @staticmethod
+    def sampled_from(seq):
+        return _SampledFrom(seq)
+
+
+def settings(max_examples: int = 25, **_):
+    """Records the example budget on the test function (capped)."""
+
+    def deco(fn):
+        fn._stub_max_examples = min(int(max_examples), _MAX_EXAMPLES_CAP)
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Run the test once per drawn example (deterministic per test)."""
+
+    def deco(fn):
+        sig = inspect.signature(fn)
+        param_names = [p for p in sig.parameters if p != "self"]
+        pos_names = param_names[: len(arg_strategies)]
+
+        @functools.wraps(fn)
+        def wrapper(*args):  # args is () or (self,)
+            rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+            n = getattr(fn, "_stub_max_examples", 25)
+            for _ in range(min(n, _MAX_EXAMPLES_CAP)):
+                kwargs = {
+                    name: strat.draw(rng)
+                    for name, strat in zip(pos_names, arg_strategies)
+                }
+                kwargs.update(
+                    {name: strat.draw(rng) for name, strat in kw_strategies.items()}
+                )
+                fn(*args, **kwargs)
+
+        # Hide the strategy-filled parameters from pytest (which would
+        # otherwise try to resolve them as fixtures via __wrapped__).
+        del wrapper.__wrapped__
+        wrapper.__signature__ = sig.replace(
+            parameters=[p for p in sig.parameters.values() if p.name == "self"]
+        )
+        return wrapper
+
+    return deco

@@ -2,7 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # dev-only dep (requirements-dev.txt); keep invariants running
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core import (
     ClusterView,
@@ -200,6 +204,16 @@ class TestECTimeModel:
         tm = ECTimeModel()
         assert tm.t_encode(4, 1, 400.0) == pytest.approx(tm.e0)
         assert tm.t_decode(1, 400.0) == pytest.approx(tm.d0)
+
+    def test_vectorized_variants_match_scalar(self):
+        tm = ECTimeModel()
+        ns = np.array([2, 5, 8, 9, 3])
+        ks = np.array([1, 4, 6, 8, 2])
+        enc = tm.t_encode_many(ns, ks, 117.0)
+        dec = tm.t_decode_many(ks, 117.0)
+        for i in range(len(ns)):
+            assert enc[i] == tm.t_encode(int(ns[i]), int(ks[i]), 117.0)
+            assert dec[i] == tm.t_decode(int(ks[i]), 117.0)
 
 
 @given(

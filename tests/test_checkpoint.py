@@ -111,6 +111,27 @@ class TestRepair:
         ck.save(state, 1)
         assert ck.repair() == 0
 
+    def test_repaired_chunks_match_surviving_shape(self):
+        """Regression: repair must re-encode the bucket-padded payload —
+        otherwise replacement chunks differ in shape from survivors and
+        restore fails on groups whose size is not a power of two."""
+        cfg, state = tiny_state()
+        fabric = small_fabric()
+        ck = DRexCheckpointer(fabric, "drex_lb", CheckpointPolicy(item_mb=0.25))
+        ck.save(state, 1)
+        # Fail every node that holds row 0 of some group, so restore must
+        # read at least one repaired chunk alongside surviving ones.
+        first_row_nodes = {
+            meta["groups"][0]["node_ids"][0]
+            for meta in ck._manifests[1]["leaves"]
+            if meta is not None
+        }
+        for n in list(first_row_nodes)[:2]:
+            fabric.fail_node(n)
+        assert ck.repair() > 0
+        restored, _ = ck.restore_latest(state)
+        assert states_equal(state, restored)
+
 
 class TestKernelVsRefCodecs:
     def test_checkpoint_identical_between_codecs(self):

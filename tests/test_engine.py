@@ -1,0 +1,297 @@
+"""Placement-engine + registry tests: registry round-trips, batched
+place_many == sequential place (bit-for-bit), commit/rollback exactness,
+capability-driven behavior, telemetry."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BatchContext,
+    ClusterView,
+    DataItem,
+    PlacementEngine,
+    SCHEDULER_NAMES,
+    Scheduler,
+    batch_stats,
+    create_scheduler,
+    get_spec,
+    parity_frontier,
+    ParityFrontier,
+    poisson_binomial_cdf,
+    scheduler_capabilities,
+    scheduler_names,
+)
+from repro.storage import make_node_set, make_trace
+
+
+def mk_items(n=40, size=60.0, rt=0.99, dt=365.0):
+    return [DataItem(i, size + 3.0 * i, float(i), dt, rt) for i in range(n)]
+
+
+def mk_engine(name, **kw):
+    return PlacementEngine(make_node_set("most_used", 0.001), name, **kw)
+
+
+class TestRegistry:
+    @pytest.mark.parametrize("name", SCHEDULER_NAMES)
+    def test_round_trips_all_nine(self, name):
+        sched = create_scheduler(name)
+        assert sched.name == name
+        spec = get_spec(name)
+        assert spec.name == name
+        assert scheduler_capabilities(sched) == spec.capabilities
+
+    def test_all_nine_listed(self):
+        assert set(SCHEDULER_NAMES) <= set(scheduler_names())
+
+    def test_family_resolves_unregistered_configs(self):
+        sched = create_scheduler("ec(10,4)")
+        assert (sched.k, sched.p) == (10, 4)
+        assert "ec(10,4)" in scheduler_names()
+
+    def test_names_tolerate_case_and_whitespace(self):
+        # The old make_scheduler accepted "ec(6, 3)"; keep that tolerance,
+        # normalized to one canonical registry entry.
+        sched = create_scheduler("EC(6, 3)")
+        assert (sched.k, sched.p) == (6, 3)
+        assert "ec(6, 3)" not in scheduler_names()
+
+    def test_atomic_rollback_restores_scheduler_smin(self):
+        eng = mk_engine("drex_sc")
+        smin0 = eng.scheduler.smin_mb
+        tiny = DataItem(0, 0.5, 0.0, 365.0, 0.9)
+        huge = DataItem(1, 1e9, 0.0, 365.0, 0.9)
+        eng.place_many([tiny, huge], atomic=True)
+        assert eng.scheduler.smin_mb == smin0
+
+    def test_batch_context_caches_stay_bounded(self):
+        ctx = BatchContext(max_entries=8)
+        eng = mk_engine("drex_sc")
+        eng.place_many(mk_items(30), ctx=ctx)
+        assert len(ctx._frontiers) <= 8
+
+    def test_unknown_name_raises_with_known_list(self):
+        with pytest.raises(ValueError, match="drex_sc"):
+            create_scheduler("definitely_not_a_scheduler")
+
+    def test_capability_flags_match_paper_semantics(self):
+        # §5.7: only the four adaptive D-Rex/greedy algorithms grow parity.
+        growers = {
+            n for n in SCHEDULER_NAMES
+            if get_spec(n).capabilities.supports_parity_growth
+        }
+        assert growers == {
+            "drex_sc", "drex_lb", "greedy_min_storage", "greedy_least_used"
+        }
+        assert get_spec("daos").capabilities.adaptive
+        assert not get_spec("ec(3,2)").capabilities.adaptive
+        assert get_spec("random_spread").capabilities.randomized
+
+    def test_default_capabilities_for_unregistered_scheduler(self):
+        class Custom(Scheduler):
+            name = "custom"
+
+        caps = scheduler_capabilities(Custom())
+        assert not caps.supports_parity_growth and not caps.adaptive
+
+
+class TestPlaceManyEquivalence:
+    @pytest.mark.parametrize("name", SCHEDULER_NAMES)
+    def test_matches_sequential_place_bit_for_bit(self, name):
+        items = mk_items()
+        seq = mk_engine(name)
+        seq_records = [seq.place(it) for it in items]
+        bat = mk_engine(name)
+        bat_records = bat.place_many(items)
+        assert [r.placement for r in seq_records] == [
+            r.placement for r in bat_records
+        ]
+        np.testing.assert_array_equal(seq.cluster.used_mb, bat.cluster.used_mb)
+
+    @pytest.mark.parametrize("name", ["drex_sc", "drex_lb", "greedy_least_used"])
+    def test_matches_on_real_trace(self, name):
+        items = make_trace("meva", seed=3, n_items=60, reliability=0.95)
+        seq = mk_engine(name)
+        seq_pl = [seq.place(it).placement for it in items]
+        bat = mk_engine(name)
+        bat_pl = [r.placement for r in bat.place_many(items)]
+        assert seq_pl == bat_pl
+
+    def test_context_actually_reused(self):
+        ctx = BatchContext()
+        mk_engine("drex_sc").place_many(mk_items(), ctx=ctx)
+        assert ctx.hits > 0
+
+    def test_random_spread_accepts_negative_item_id(self):
+        eng = mk_engine("random_spread", auto_commit=False)
+        rec = eng.place(DataItem(-1, 10.0, 0.0, 365.0, 0.9))
+        assert rec.placement is not None
+
+    def test_reregistration_is_idempotent(self):
+        import importlib
+
+        import repro.core.algorithms as algos
+
+        importlib.reload(algos)  # decorators re-run; must not raise
+        assert create_scheduler("drex_sc").name == "drex_sc"
+
+    def test_random_spread_repeatable_per_seed(self):
+        # Same (seed, item) -> same mapping, regardless of call history.
+        item = mk_items(1)[0]
+        a = mk_engine("random_spread", auto_commit=False, seed=7)
+        b = mk_engine("random_spread", auto_commit=False, seed=7)
+        b.place(mk_items(2)[1])  # different call history
+        assert a.place(item).placement == b.place(item).placement
+        c = mk_engine("random_spread", auto_commit=False, seed=8)
+        assert a.place(item).placement != c.place(item).placement
+
+
+class TestCommitRollback:
+    def test_place_commits(self):
+        eng = mk_engine("drex_lb")
+        before = eng.cluster.used_mb.copy()
+        rec = eng.place(mk_items(1)[0])
+        assert rec.ok and rec.committed
+        ids = list(rec.placement.node_ids)
+        assert np.all(eng.cluster.used_mb[ids] > before[ids])
+
+    def test_rollback_restores_cluster_exactly(self):
+        eng = mk_engine("drex_sc")
+        snap = eng.snapshot()
+        used0 = eng.cluster.used_mb.copy()
+        alive0 = eng.cluster.alive.copy()
+        eng.place_many(mk_items(25))
+        assert eng.cluster.used_mb.sum() > used0.sum()
+        eng.rollback(snap)
+        np.testing.assert_array_equal(eng.cluster.used_mb, used0)
+        np.testing.assert_array_equal(eng.cluster.alive, alive0)
+
+    def test_atomic_batch_rolls_back_on_any_reject(self):
+        eng = mk_engine("ec(6,3)")
+        used0 = eng.cluster.used_mb.copy()
+        items = mk_items(3) + [DataItem(99, 1e9, 0.0, 365.0, 0.9)]  # too big
+        records = eng.place_many(items, atomic=True)
+        assert not records[-1].ok
+        assert not any(r.committed for r in records)
+        np.testing.assert_array_equal(eng.cluster.used_mb, used0)
+
+    def test_release_returns_bytes(self):
+        eng = mk_engine("greedy_least_used")
+        total0 = eng.cluster.used_mb.sum()
+        rec = eng.place(mk_items(1)[0])
+        eng.release(rec)
+        assert eng.cluster.used_mb.sum() == pytest.approx(total0)
+
+    def test_auto_commit_false_leaves_cluster_untouched(self):
+        eng = mk_engine("drex_lb", auto_commit=False)
+        used0 = eng.cluster.used_mb.copy()
+        rec = eng.place(mk_items(1)[0])
+        assert rec.ok and not rec.committed
+        np.testing.assert_array_equal(eng.cluster.used_mb, used0)
+
+
+class TestTelemetry:
+    def test_records_carry_overhead_and_reason(self):
+        eng = mk_engine("drex_lb")
+        ok = eng.place(mk_items(1)[0])
+        assert ok.overhead_s >= 0.0 and ok.reason == ""
+        bad = eng.place(DataItem(1, 1e9, 0.0, 365.0, 0.9))
+        assert not bad.ok and bad.reason != "" and bad.chunk_mb == 0.0
+
+    def test_batch_stats_aggregates(self):
+        eng = mk_engine("greedy_least_used")
+        items = mk_items(10) + [DataItem(50, 1e9, 0.0, 365.0, 0.9)]
+        stats = batch_stats(eng.place_many(items))
+        assert stats["n_items"] == 11
+        assert stats["n_placed"] == 10 and stats["n_rejected"] == 1
+        assert stats["overhead_per_item_ms"] > 0.0
+        assert sum(stats["reject_reasons"].values()) == 1
+
+    def test_engine_stats_accumulate(self):
+        eng = mk_engine("drex_lb")
+        eng.place_many(mk_items(5))
+        assert eng.stats["n_placed"] == 5
+        assert eng.stats["mb_committed"] > 0.0
+
+    def test_rolled_back_batch_leaves_no_stats_trace(self):
+        eng = mk_engine("ec(6,3)")
+        stats0 = dict(eng.stats)
+        items = mk_items(3) + [DataItem(99, 1e9, 0.0, 365.0, 0.9)]
+        eng.place_many(items, atomic=True)
+        assert eng.stats == stats0
+
+    def test_batch_stats_mb_committed_honors_flag(self):
+        eng = mk_engine("drex_lb", auto_commit=False)
+        stats = batch_stats(eng.place_many(mk_items(4)))
+        assert stats["mb_placed"] > 0.0
+        assert stats["mb_committed"] == 0.0
+
+    def test_release_adjusts_committed_bytes(self):
+        eng = mk_engine("drex_lb")
+        rec = eng.place(mk_items(1)[0])
+        eng.release(rec)
+        assert eng.stats["mb_committed"] == pytest.approx(0.0)
+
+    def test_context_safe_across_different_clusters(self):
+        # A (mis)shared context must never leak one cluster's failure
+        # probabilities into another's decisions.
+        ctx = BatchContext()
+        item = mk_items(1)[0]
+        a = PlacementEngine(make_node_set("most_used", 0.001), "drex_lb")
+        b = PlacementEngine(make_node_set("most_unreliable", 0.001), "drex_lb")
+        pa = a.place(item, ctx=ctx).placement
+        pb = b.place(item, ctx=ctx).placement
+        assert pa == PlacementEngine(
+            make_node_set("most_used", 0.001), "drex_lb"
+        ).place(item).placement
+        assert pb == PlacementEngine(
+            make_node_set("most_unreliable", 0.001), "drex_lb"
+        ).place(item).placement
+
+    def test_legacy_two_arg_scheduler_still_works(self):
+        class Legacy(Scheduler):
+            name = "legacy"
+
+            def place(self, item, cluster):  # old signature, no ctx
+                return create_scheduler("ec(3,2)").place(item, cluster)
+
+        eng = PlacementEngine(make_node_set("most_used", 0.001), Legacy())
+        records = eng.place_many(mk_items(3))
+        assert all(r.ok for r in records)
+
+
+class TestParityFrontierKernel:
+    def test_matches_per_prefix_cdf_scan(self):
+        rng = np.random.default_rng(5)
+        for _ in range(25):
+            n = int(rng.integers(2, 16))
+            probs = rng.uniform(0.0, 0.6, size=n)
+            t = float(rng.uniform(0.5, 0.99999))
+            fr = parity_frontier(probs, t)
+            for m in range(1, n + 1):
+                want = -1
+                for p in range(m):
+                    if poisson_binomial_cdf(probs[:m], p, "exact") >= t:
+                        want = p
+                        break
+                assert fr[m - 1] == want
+
+    def test_lazy_extension_matches_eager(self):
+        probs = np.array([0.1, 0.3, 0.05, 0.2, 0.4, 0.15])
+        eager = parity_frontier(probs, 0.999)
+        lazy = ParityFrontier(probs, 0.999)
+        assert lazy.min_parity(2) == eager[1]
+        assert lazy.min_parity(6) == eager[5]
+        assert lazy.min_parity(4) == eager[3]  # backwards query: no re-run
+
+    def test_monotone_in_prefix_length(self):
+        rng = np.random.default_rng(9)
+        probs = rng.uniform(0.0, 0.5, size=30)
+        fr = parity_frontier(probs, 0.9999)
+        feas = fr[fr >= 0]
+        assert np.all(np.diff(feas) >= 0)
+
+    def test_out_of_range_queries(self):
+        fr = ParityFrontier(np.array([0.1, 0.2]), 0.99)
+        assert fr.min_parity(0) == -1
+        assert fr.min_parity(3) == -1

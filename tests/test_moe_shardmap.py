@@ -7,9 +7,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AxisType
 
 from repro.configs import get_config
+from repro.launch.mesh import make_mesh_compat
 from repro.models import forward, init_params
 from repro.models.sharding import activate_mesh
 
@@ -26,7 +26,8 @@ def setup():
 
 
 def _mesh():
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    # AxisType-compatible on jax <= 0.4.x (no axis_types kwarg there).
+    return make_mesh_compat((1, 1), ("data", "model"))
 
 
 class TestShardMapDispatch:

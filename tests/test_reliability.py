@@ -4,7 +4,11 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # dev-only dep (requirements-dev.txt); keep invariants running
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core.reliability import (
     batch_pr_avail_exact,

@@ -81,11 +81,10 @@ class TestJaxprFlops:
 def _compile(fn, *args, mesh_axes=None, in_shardings=None):
     if in_shardings is None:
         return jax.jit(fn).lower(*args).compile()
-    from jax.sharding import AxisType
+    # AxisType-compatible on jax <= 0.4.x (no axis_types kwarg there).
+    from repro.launch.mesh import make_mesh_compat
 
-    mesh = jax.make_mesh(
-        (jax.device_count(),), ("x",), axis_types=(AxisType.Auto,)
-    )
+    mesh = make_mesh_compat((jax.device_count(),), ("x",))
     with mesh:
         return jax.jit(fn, in_shardings=in_shardings).lower(*args).compile()
 
