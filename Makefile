@@ -3,12 +3,13 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: verify test smoke-bench
 
-## Tier-1 gate: full test suite + a smoke run of the scheduling-overhead
-## benchmark (exercises the engine's batched place_many end to end).
+## Tier-1 gate: full test suite + smoke runs of the scheduling-overhead
+## benchmark (batched place_many end to end) and the Fig. 12 failure
+## benchmark (event-driven failure/repair path incl. finite repair bw).
 verify: test smoke-bench
 
 test:
 	$(PYTHON) -m pytest -x -q
 
 smoke-bench:
-	$(PYTHON) -m benchmarks.run --only table2 --smoke
+	$(PYTHON) -m benchmarks.run --only table2,fig12 --smoke

@@ -26,7 +26,8 @@ CAP_SCALE = 0.001  # 5-20 TB drives -> 5-20 GB (same ratios)
 
 
 def sim(node_set: str, dataset: str, algo: str, *, fill=0.95, reliability="random_nines",
-        seed=0, failure_schedule=(), n_items=None, duration_days=None):
+        seed=0, failure_schedule=(), n_items=None, duration_days=None,
+        repair_bw_mbps=float("inf")):
     nodes = make_node_set(node_set, capacity_scale=CAP_SCALE)
     cap = sum(n.capacity_mb for n in nodes)
     items = make_trace(
@@ -37,7 +38,8 @@ def sim(node_set: str, dataset: str, algo: str, *, fill=0.95, reliability="rando
         reliability=reliability,
         duration_days=duration_days,
     )
-    cfg = SimConfig(failure_schedule=tuple(failure_schedule), seed=seed)
+    cfg = SimConfig(failure_schedule=tuple(failure_schedule), seed=seed,
+                    repair_bw_mbps=repair_bw_mbps)
     t0 = time.perf_counter()
     res = run_simulation(nodes, create_scheduler(algo), items, cfg)
     wall = time.perf_counter() - t0

@@ -47,6 +47,15 @@ BENCHES = {
 #: reduced parameters per benchmark under --smoke (others run unchanged).
 SMOKE_KWARGS = {
     "table2": dict(sizes=(10, 50), reps=1, batch=100),
+    # CI-sized failure/repair sweep: exercises the event-driven simulator's
+    # failure, repair-bandwidth and drop paths on every PR.
+    "fig12": dict(
+        rts=(0.9,),
+        failures=(2, 5),
+        repair_bws=(float("inf"), 0.01),
+        sweep_algos=("drex_sc", "ec(3,2)"),
+        algos=("drex_sc", "drex_lb", "ec(3,2)"),
+    ),
 }
 
 

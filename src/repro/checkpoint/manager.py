@@ -28,7 +28,7 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-from repro.core import BatchContext, DataItem, PlacementEngine, Scheduler
+from repro.core import BatchContext, DataItem, Placement, PlacementEngine, Scheduler
 from repro.ec import ECCodec
 from repro.train.step import TrainState
 
@@ -223,13 +223,23 @@ class DRexCheckpointer:
     def on_node_failure(self, node_id: int) -> None:
         self.fabric.fail_node(node_id)
 
-    def repair(self, step: Optional[int] = None) -> int:
+    def repair(self, step: Optional[int] = None, *, strict: bool = True) -> int:
         """Proactive repair: re-encode any group that lost chunks and place
-        the replacements on healthy nodes (keeps (K,P), re-maps). Returns
-        number of chunks rebuilt."""
+        the replacements through ``PlacementEngine.plan_repair`` (keeps
+        (K,P), re-maps; best-effort mode — group health is reported by
+        :meth:`group_reliability`).  Returns the number of chunks rebuilt.
+
+        A group whose missing chunks cannot *all* be re-placed (not enough
+        live nodes with capacity) is left untouched and reported: with
+        ``strict=True`` (default) an :class:`IOError` lists every such
+        group after the repairable ones were fixed.  The old code silently
+        under-repaired here — ``zip(missing, live)`` truncated when live
+        candidates ran out, leaving groups degraded with no error.
+        """
         step = step if step is not None else max(self._manifests)
         manifest = self._manifests[step]
         rebuilt = 0
+        unplaced: list[tuple[str, int, str]] = []
         for meta in manifest["leaves"]:
             if meta is None:
                 continue
@@ -248,18 +258,50 @@ class DRexCheckpointer:
                 # chunks must match the surviving chunks' shape.
                 chunks = codec.encode(_pad_to_bucket(payload))
                 chunk_mb = chunks.shape[1] / 1e6
-                live = [
-                    n
-                    for n in self.fabric.live_nodes()
-                    if n not in g.node_ids
-                    and self.fabric.cluster.free_mb[n] >= chunk_mb
+                missing_rows = {row for row, _ in missing}
+                survivors = [
+                    node
+                    for row, node in enumerate(g.node_ids)
+                    if row not in missing_rows
                 ]
-                live.sort(key=lambda n: -self.fabric.cluster.free_mb[n])
-                for (row, _), new_node in zip(missing, live):
+                self._item_counter += 1
+                item = DataItem(
+                    item_id=self._item_counter,
+                    size_mb=chunk_mb * g.k,
+                    arrival_time=float(step),
+                    delta_t_days=self.policy.retention_days,
+                    reliability_target=self.policy.reliability_target,
+                )
+                # require_target=False: the code is fixed at (K, P), so
+                # repair is best-effort re-mapping (no reliability DP to
+                # amortize — group health is group_reliability()'s job);
+                # commit=False because the fabric accounts bytes as
+                # chunks land (fabric.put).
+                plan = self.engine.plan_repair(
+                    item,
+                    Placement(k=g.k, p=g.p, node_ids=tuple(g.node_ids)),
+                    chunk_mb=chunk_mb,
+                    survivors=survivors,
+                    allow_parity_growth=False,
+                    require_target=False,
+                    commit=False,
+                )
+                if not plan.ok:
+                    unplaced.append((g.key, len(missing), plan.reason))
+                    continue
+                for (row, _), new_node in zip(missing, plan.new_nodes):
                     self.fabric.put(new_node, f"{g.key}_r{row}", chunks[row].tobytes())
                     g.node_ids[row] = new_node
                     rebuilt += 1
                 gd["node_ids"] = g.node_ids
+        if unplaced and strict:
+            detail = "; ".join(
+                f"{key}: {n} missing chunk(s) ({reason})"
+                for key, n, reason in unplaced
+            )
+            raise IOError(
+                f"repair left {len(unplaced)} group(s) degraded: {detail}"
+            )
         return rebuilt
 
     def group_reliability(self, step: Optional[int] = None) -> list[float]:

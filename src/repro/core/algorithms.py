@@ -63,8 +63,12 @@ class Scheduler:
     name: str = "base"
     #: capability record; overwritten by the registry decorator.
     capabilities: SchedulerCapabilities = SchedulerCapabilities()
-    #: smallest item size seen so far (MB); simulator keeps this fresh.
-    smin_mb: float = 1.0
+    #: smallest item size seen so far (MB); None until the first item is
+    #: observed.  Seeded from the first item rather than a fixed 1 MB
+    #: prior: traces whose smallest item exceeds 1 MB would otherwise
+    #: never move the anchor, skewing the SC saturation curve's
+    #: (s_min, 1/L) endpoint (§4.4).
+    smin_mb: Optional[float] = None
 
     def place(
         self, item: DataItem, cluster: ClusterView, ctx=None
@@ -74,7 +78,10 @@ class Scheduler:
     def observe_item(self, item: DataItem) -> None:
         """Track the smallest item size (used by the SC saturation curve)."""
         if item.size_mb > 0:
-            self.smin_mb = min(self.smin_mb, item.size_mb)
+            smin = self.smin_mb
+            self.smin_mb = (
+                item.size_mb if smin is None else min(smin, item.size_mb)
+            )
 
     # -- shared helpers -----------------------------------------------------
 
@@ -347,7 +354,9 @@ class DRexSC(Scheduler):
         cap_sorted = cluster.capacity_mb[by_free]
         used = cluster.used_mb
         cap = cluster.capacity_mb
-        smin = self.smin_mb
+        # observe_item just ran, so smin_mb is only None for degenerate
+        # zero-size items; fall back to the old 1 MB prior there.
+        smin = self.smin_mb if self.smin_mb is not None else 1.0
         size = item.size_mb
         live = cluster.live_ids()
         # Saturation baseline over every live node; candidates add only the

@@ -19,6 +19,12 @@ benchmarks) each reimplemented ad hoc:
   of each computation, so batched placements are bit-identical to
   sequential ``place`` calls — the DP cost of D-Rex SC simply amortizes
   whenever consecutive items see an unchanged sort order.
+* **repair planning** — :meth:`PlacementEngine.plan_repair` routes
+  degraded-item re-placement through the shared
+  :class:`~repro.core.repair.RepairPlanner` (capability-gated parity
+  growth, reliability feasibility via the same DP kernel), with the same
+  commit/telemetry treatment as placements; the simulator's failure path
+  and the checkpoint manager's proactive repair both delegate here.
 """
 
 from __future__ import annotations
@@ -32,12 +38,14 @@ import numpy as np
 
 from .registry import create_scheduler, scheduler_capabilities
 from .reliability import min_parity_for_target, ParityFrontier
+from .repair import RepairPlan, RepairPlanner
 from .types import ClusterView, DataItem, Placement, StorageNode
 
 __all__ = [
     "BatchContext",
     "PlacementRecord",
     "PlacementEngine",
+    "RepairPlan",
     "batch_stats",
 ]
 
@@ -171,11 +179,15 @@ class PlacementEngine:
             )
         except (TypeError, ValueError):  # builtins / C callables
             self._pass_ctx = False
+        self._repair_planner = RepairPlanner(self.cluster)
         self.stats = {
             "n_placed": 0,
             "n_rejected": 0,
             "mb_committed": 0.0,
             "overhead_s": 0.0,
+            "n_repairs_planned": 0,
+            "n_repairs_failed": 0,
+            "repair_mb_committed": 0.0,
         }
 
     # -- placement ----------------------------------------------------------
@@ -248,19 +260,85 @@ class PlacementEngine:
             records = [dataclasses.replace(r, committed=False) for r in records]
         return records
 
+    # -- repair ---------------------------------------------------------------
+
+    def plan_repair(
+        self,
+        item: DataItem,
+        placement: Placement,
+        *,
+        chunk_mb: float | None = None,
+        survivors: Sequence[int] | None = None,
+        allow_parity_growth: bool = True,
+        require_target: bool = True,
+        commit: bool | None = None,
+        ctx: BatchContext | None = None,
+    ) -> RepairPlan:
+        """Plan (and, with ``commit``, reserve) re-placement of an item's
+        lost chunks — the one repair policy in the codebase (§5.7).
+
+        Parity growth happens only when *both* the caller allows it and
+        the scheduler's registry entry declares ``supports_parity_growth``
+        (capability gating, never name matching).  ``commit`` defaults to
+        the engine's ``auto_commit``; committing reserves one chunk on
+        each replacement node so concurrent placements see the capacity
+        as taken while the repair transfer is in flight.  Use
+        :meth:`abort_repair` to return the reservation if the repair is
+        voided (e.g. a reconstruction source dies mid-transfer).
+        """
+        t0 = time.perf_counter()
+        grow = bool(allow_parity_growth) and self.capabilities.supports_parity_growth
+        plan = self._repair_planner.plan(
+            item,
+            placement,
+            chunk_mb=chunk_mb,
+            survivors=survivors,
+            allow_parity_growth=grow,
+            require_target=require_target,
+            ctx=ctx,
+        )
+        plan = dataclasses.replace(
+            plan, overhead_s=time.perf_counter() - t0
+        )
+        self.stats["overhead_s"] += plan.overhead_s
+        if not plan.ok:
+            self.stats["n_repairs_failed"] += 1
+            return plan
+        self.stats["n_repairs_planned"] += 1
+        commit = self.auto_commit if commit is None else commit
+        if commit and plan.new_nodes:
+            self.cluster.used_mb[np.asarray(plan.new_nodes)] += plan.chunk_mb
+            self.stats["repair_mb_committed"] += plan.repair_mb
+            plan = dataclasses.replace(plan, committed=True)
+        return plan
+
+    def abort_repair(self, plan: RepairPlan) -> None:
+        """Release a committed repair's reserved replacement bytes.
+
+        Occupancy is returned only on still-alive replacement nodes —
+        fail-stop already zeroed any that died (which is exactly why the
+        repair is being aborted) — but the ``repair_mb_committed`` gauge
+        drops by the full reservation: after an abort no replacement
+        bytes remain reserved anywhere."""
+        if plan.committed and plan.new_nodes:
+            alive = [n for n in plan.new_nodes if self.cluster.alive[n]]
+            if alive:
+                self.cluster.release(alive, plan.chunk_mb)
+            self.stats["repair_mb_committed"] -= plan.repair_mb
+
     # -- commit / rollback ----------------------------------------------------
 
-    def snapshot(self) -> tuple[np.ndarray, np.ndarray, dict, float]:
+    def snapshot(self) -> tuple[np.ndarray, np.ndarray, dict, Optional[float]]:
         """Capture the mutable engine state (occupancy, liveness, stats,
         and the scheduler's observed min item size)."""
         return (
             self.cluster.used_mb.copy(),
             self.cluster.alive.copy(),
             dict(self.stats),
-            float(getattr(self.scheduler, "smin_mb", 1.0)),
+            getattr(self.scheduler, "smin_mb", None),
         )
 
-    def rollback(self, snapshot: tuple[np.ndarray, np.ndarray, dict, float]) -> None:
+    def rollback(self, snapshot: tuple[np.ndarray, np.ndarray, dict, Optional[float]]) -> None:
         """Restore a :meth:`snapshot` exactly (bitwise, not arithmetically).
         A rolled-back batch leaves no trace: telemetry counters and the
         scheduler's ``smin_mb`` observation (which feeds D-Rex SC's

@@ -49,7 +49,9 @@ class SchedulerCapabilities:
 
     #: chooses (K, P) per item instead of a fixed code.
     adaptive: bool = False
-    #: may add parity chunks when rescheduling after node failures (§5.7).
+    #: may add parity chunks when repairing after node failures (§5.7).
+    #: Consumed by ``PlacementEngine.plan_repair``: parity growth happens
+    #: only when the caller allows it AND this flag is declared.
     supports_parity_growth: bool = False
     #: placement depends on an RNG seed (mapping not a pure function of
     #: the cluster state alone).

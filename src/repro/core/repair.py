@@ -1,0 +1,184 @@
+"""Repair planning: the one policy for re-placing degraded items.
+
+Before this module existed the repo had two divergent hand-rolled repair
+paths (the simulator's chunk rescheduling and the checkpoint manager's
+proactive re-encode) that bypassed the placement engine entirely — no
+telemetry, no shared reliability-DP kernel, no capability gating.  The
+:class:`RepairPlanner` answers the one question both ask: *given an item
+whose placement lost chunks, where do the replacements go?*
+
+The policy (matching §5.7 of the paper):
+
+* fewer than K surviving chunks ⇒ the item is unrecoverable;
+* replacement targets are the freest live nodes not already involved
+  with the item (the dynamic algorithms' house style);
+* when the caller requires the reliability target to hold, the new
+  mapping must satisfy Eq. 3 — schedulers whose registry entry declares
+  ``supports_parity_growth`` may buy extra parity chunks to get there
+  (gated by :class:`~repro.core.engine.PlacementEngine`, which combines
+  the caller's flag with the scheduler's declared capability);
+* feasibility is answered through the shared reliability-DP kernel —
+  an optional :class:`~repro.core.engine.BatchContext` memoizes failure
+  probabilities and min-parity queries across the repairs of one
+  failure event.
+
+The planner is *pure*: it never mutates the cluster view.  Commit (and
+rollback of in-flight repairs) is the engine's job, so repair decisions
+get the same commit/rollback + telemetry treatment as placements.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .reliability import min_parity_for_target
+from .types import ClusterView, DataItem, Placement
+
+__all__ = ["RepairPlan", "RepairPlanner"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RepairPlan:
+    """Structured telemetry for one repair decision (the repair-side
+    analogue of :class:`~repro.core.engine.PlacementRecord`)."""
+
+    item_id: int
+    placement: Optional[Placement]     # full post-repair placement; None => infeasible
+    survivors: tuple[int, ...]         # nodes still holding valid chunks
+    new_nodes: tuple[int, ...]         # replacement targets, one chunk each
+    added_parity: int                  # parity chunks bought on top of the old P
+    chunk_mb: float
+    candidates_considered: int
+    reason: str                        # "" on success
+    overhead_s: float = 0.0            # planner wall time (engine fills this in)
+    committed: bool = False            # True iff replacement bytes were reserved
+
+    @property
+    def ok(self) -> bool:
+        return self.placement is not None
+
+    @property
+    def repair_mb(self) -> float:
+        """Bytes that must be transferred to complete this repair."""
+        return self.chunk_mb * len(self.new_nodes)
+
+
+class RepairPlanner:
+    """Plans degraded-item re-placement against one :class:`ClusterView`."""
+
+    def __init__(self, cluster: ClusterView):
+        self.cluster = cluster
+
+    def plan(
+        self,
+        item: DataItem,
+        placement: Placement,
+        *,
+        chunk_mb: float | None = None,
+        survivors: Sequence[int] | None = None,
+        allow_parity_growth: bool = False,
+        require_target: bool = True,
+        ctx=None,
+    ) -> RepairPlan:
+        """Plan replacements for ``placement``'s lost chunks.
+
+        ``survivors`` is the set of nodes still holding valid chunks; when
+        omitted it is derived from the view's liveness (correct while the
+        only invalid chunks are those on currently-dead nodes — callers
+        tracking chunk state out of band, e.g. the checkpoint manager or
+        in-flight repairs, pass it explicitly).  ``require_target=False``
+        skips the reliability-feasibility loop (best-effort repair with
+        the old (K, P) kept — the checkpoint plane's mode, where group
+        health is reported separately).
+        """
+        cluster = self.cluster
+        chunk = (
+            placement.chunk_size_mb(item.size_mb)
+            if chunk_mb is None
+            else float(chunk_mb)
+        )
+        if survivors is None:
+            surv = [int(i) for i in placement.node_ids if cluster.alive[i]]
+        else:
+            surv = [int(i) for i in survivors]
+        lost = placement.n - len(surv)
+
+        def infeasible(reason: str, considered: int = 0) -> RepairPlan:
+            return RepairPlan(
+                item.item_id, None, tuple(surv), (), 0, chunk, considered, reason
+            )
+
+        if lost == 0:
+            return RepairPlan(
+                item.item_id, placement, tuple(surv), (), 0, chunk, 0, ""
+            )
+        if len(surv) < placement.k:
+            return infeasible(
+                f"unrecoverable: {len(surv)}/{placement.k} chunks survive"
+            )
+        # Freest-first replacement candidates; every node of the old
+        # mapping is excluded (survivors must not double up, dead nodes
+        # are gone, and a node that lost its chunk while staying alive —
+        # the checkpoint heal case — held this item once already).
+        exclude = set(surv) | {int(i) for i in placement.node_ids}
+        candidates = [
+            int(i)
+            for i in cluster.live_ids()
+            if int(i) not in exclude and cluster.free_mb[i] >= chunk
+        ]
+        candidates.sort(key=lambda i: -cluster.free_mb[i])
+        considered = len(candidates)
+        if len(candidates) < lost:
+            return infeasible(
+                f"not enough replacement capacity: need {lost} nodes, "
+                f"{len(candidates)} fit",
+                considered,
+            )
+        new_map = surv + candidates[:lost]
+        remaining = candidates[lost:]
+        added = 0
+        if require_target:
+            # Min-parity feasibility over the candidate mapping; dynamic
+            # schedulers may keep buying parity nodes until Eq. 3 holds.
+            while True:
+                probs = self._fail_probs(item.delta_t_days, ctx)[new_map]
+                mp = self._min_parity(probs, item.reliability_target, ctx)
+                if 0 <= mp <= placement.p + added:
+                    break
+                if not allow_parity_growth or not remaining:
+                    return infeasible(
+                        "reliability target unreachable after failure",
+                        considered,
+                    )
+                new_map.append(remaining.pop(0))
+                added += 1
+        new_nodes = tuple(n for n in new_map if n not in surv)
+        return RepairPlan(
+            item.item_id,
+            Placement(
+                k=placement.k, p=placement.p + added, node_ids=tuple(new_map)
+            ),
+            tuple(surv),
+            new_nodes,
+            added,
+            chunk,
+            considered,
+            "",
+        )
+
+    # -- shared-kernel shims (context-optional) -------------------------------
+
+    def _fail_probs(self, delta_t_days: float, ctx) -> np.ndarray:
+        if ctx is not None:
+            return ctx.fail_probs(self.cluster, delta_t_days)
+        return self.cluster.fail_probs(delta_t_days)
+
+    @staticmethod
+    def _min_parity(probs: np.ndarray, target: float, ctx) -> int:
+        if ctx is not None:
+            return ctx.min_parity(probs, target)
+        mp = min_parity_for_target(probs, target)
+        return -1 if mp is None else int(mp)

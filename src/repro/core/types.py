@@ -135,6 +135,27 @@ class ClusterView:
     def fail_node(self, node_id: int) -> None:
         self.alive[node_id] = False
 
+    def heal_node(self, node_id: int) -> None:
+        """Fail-stop recovery: the node returns alive and *empty* (its
+        chunks were permanently lost when it failed)."""
+        self.alive[node_id] = True
+        self.used_mb[node_id] = 0.0
+
+    def add_node(self, node: StorageNode) -> int:
+        """Append a node to the view (elastic join) and return its id.
+
+        Views index nodes by position, so a joining node's id is always
+        the previous ``n_nodes`` regardless of the ``node_id`` recorded
+        on the :class:`StorageNode`."""
+        nid = self.n_nodes
+        self.capacity_mb = np.append(self.capacity_mb, float(node.capacity_mb))
+        self.used_mb = np.append(self.used_mb, float(node.used_mb))
+        self.write_bw = np.append(self.write_bw, float(node.write_bw))
+        self.read_bw = np.append(self.read_bw, float(node.read_bw))
+        self.afr = np.append(self.afr, float(node.annual_failure_rate))
+        self.alive = np.append(self.alive, not node.failed)
+        return nid
+
     def copy(self) -> "ClusterView":
         return ClusterView(
             self.capacity_mb.copy(), self.used_mb.copy(), self.write_bw.copy(),

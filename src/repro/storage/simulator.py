@@ -1,10 +1,35 @@
-"""Discrete-event storage simulator (paper §5, simulator originally in C).
+"""Event-driven storage simulator (paper §5, simulator originally in C).
 
-Processes store requests in arrival order through a scheduler, tracks
-per-node occupancy, computes the paper's two quality metrics (W — bytes
-successfully stored — and T — average I/O throughput over
-encode+decode+write+read, Eq. in §3.2), and injects fail-stop node
-failures with chunk rescheduling (§5.7).
+The run loop is a discrete-event core over a heap of typed events:
+
+* **item arrivals** — the scheduler places each store request through the
+  :class:`~repro.core.engine.PlacementEngine` (Problem 1 constraints,
+  per-item overhead telemetry);
+* **fail-stop failures** — a node dies, its chunks are lost, and every
+  affected item is routed through ``PlacementEngine.plan_repair`` (§5.7:
+  replacement nodes freest-first, parity growth gated on the scheduler's
+  declared capability);
+* **repair completions** — with a *finite* per-node repair bandwidth
+  (``SimConfig.repair_bw_mbps``), replacement chunks take
+  ``chunk_mb / repair_bw_mbps`` seconds to land and each node ingests
+  one repair transfer at a time, so repairs queue.  An item whose
+  surviving chunks (or replacement targets) are hit by another failure
+  while its repair is still in flight loses the repair — and is dropped
+  outright if fewer than K chunks remain.  This is the repair-rate
+  sensitivity that repair-bandwidth lower bounds (Luby et al.,
+  arXiv:2002.07904) show governs data survival; the legacy
+  instantaneous-repair model is exactly the ``repair_bw_mbps=inf``
+  special case and reproduces the pre-refactor results bit-for-bit
+  (except D-Rex SC, whose saturation anchor changed intentionally with
+  the ``smin_mb`` seeding fix — see ``TestLegacyEquivalence``).
+* **node joins / heals** — late-arriving nodes
+  (``SimConfig.node_join_schedule``) grow the cluster view mid-run and
+  immediately become placement/repair candidates; healed nodes
+  (``SimConfig.node_heal_schedule``) return alive and empty.
+
+Metrics are unchanged: W — bytes successfully stored — and T — average
+I/O throughput over encode+decode+write+read (Eq. in §3.2); the Fig. 12
+retained-fraction metric now responds to repair bandwidth.
 
 Transfer model per the paper: all chunk transfers are parallel, no shared
 links, so the slowest node in the mapping bottlenecks both the write and
@@ -15,16 +40,27 @@ the read; encode/decode times come from the calibrated linear model
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence
+import heapq
+import itertools
+import math
+from typing import Optional, Sequence
 
 import numpy as np
 
 from repro.core.algorithms import Scheduler
 from repro.core.engine import BatchContext, PlacementEngine
-from repro.core.registry import scheduler_capabilities
+from repro.core.repair import RepairPlan
 from repro.core.types import ClusterView, DataItem, ECTimeModel, Placement, StorageNode
 
 __all__ = ["SimConfig", "SimResult", "StoredItem", "Simulator", "run_simulation"]
+
+SECONDS_PER_DAY = 86400.0
+
+# Event priorities: ties at the same instant resolve in this order.
+# Joins/heals first (capacity becomes available), then completions of
+# in-flight repairs, then failures, then arrivals — failures preceding
+# same-day arrivals matches the legacy loop's ``day <= arrival`` rule.
+_P_JOIN, _P_HEAL, _P_REPAIR, _P_FAIL, _P_ARRIVAL = range(5)
 
 
 @dataclasses.dataclass
@@ -32,11 +68,19 @@ class SimConfig:
     time_model: ECTimeModel = dataclasses.field(default_factory=ECTimeModel)
     #: (day, node_id) forced fail-stop events; node_id -1 = weighted random.
     failure_schedule: tuple[tuple[float, int], ...] = ()
-    #: dynamic schedulers may add parity chunks when rescheduling (§5.7).
+    #: dynamic schedulers may add parity chunks when repairing (§5.7).
     allow_parity_growth: bool = True
     seed: int = 0
     #: measure per-item scheduling latency (Table 2).
     measure_overhead: bool = False
+    #: per-node repair ingest bandwidth (MB/s); each node accepts one
+    #: repair transfer at a time, so repairs queue.  ``inf`` reproduces
+    #: the legacy instantaneous-repair model exactly.
+    repair_bw_mbps: float = math.inf
+    #: (day, StorageNode) nodes joining the cluster mid-run.
+    node_join_schedule: tuple[tuple[float, StorageNode], ...] = ()
+    #: (day, node_id) failed nodes returning alive and empty.
+    node_heal_schedule: tuple[tuple[float, int], ...] = ()
 
 
 @dataclasses.dataclass
@@ -55,6 +99,19 @@ class StoredItem:
 
 
 @dataclasses.dataclass
+class _PendingRepair:
+    """An in-flight repair: the plan is committed (capacity reserved) but
+    the replacement chunks have not landed yet."""
+
+    repair_id: int
+    plan: RepairPlan
+    finish_day: float
+    #: per-replacement-node transfer window (start_day, end_day) booked
+    #: on that node's repair lane — released if the repair is voided.
+    transfers: dict[int, tuple[float, float]]
+
+
+@dataclasses.dataclass
 class SimResult:
     stored_mb: float
     total_mb: float
@@ -70,6 +127,18 @@ class SimResult:
     failed_item_ids: list[int]
     sched_overhead_s: list[float]
     n_node_failures: int = 0
+    #: occupancy each node held at the moment it failed (latest failure
+    #: per node) — ``per_node_used_mb`` shows failed nodes as 0, so this
+    #: is what lets Fig. 7-style utilization plots distinguish a dead
+    #: node from an idle one.
+    used_mb_at_failure: dict[int, float] = dataclasses.field(default_factory=dict)
+    n_repairs_planned: int = 0
+    n_repairs_completed: int = 0
+    #: repairs voided mid-flight (a source or target died before the
+    #: replacement chunks landed); each is re-planned or dropped.
+    n_repairs_aborted: int = 0
+    #: replacement bytes actually landed by completed repairs.
+    repaired_mb: float = 0.0
 
     @property
     def stored_fraction(self) -> float:
@@ -93,10 +162,10 @@ class Simulator:
     ):
         self.nodes = list(nodes)
         self.config = config or SimConfig()
-        # The engine owns the view, commits placements, and measures
-        # per-decision overhead; the sim shares one BatchContext across
-        # the whole run (AFRs never change mid-simulation) so the
-        # reliability DP amortizes over the trace.
+        # The engine owns the view, commits placements and repair
+        # reservations, and measures per-decision overhead; the sim
+        # shares one BatchContext across the whole run (AFRs never change
+        # mid-simulation) so the reliability DP amortizes over the trace.
         self.engine = PlacementEngine(ClusterView.from_nodes(self.nodes), scheduler)
         self.scheduler = self.engine.scheduler
         self.cluster = self.engine.cluster
@@ -105,6 +174,20 @@ class Simulator:
         self.live_items: dict[int, StoredItem] = {}
         self.dropped_mb = 0.0
         self.n_node_failures = 0
+        self.used_mb_at_failure: dict[int, float] = {}
+        # Event heap + in-flight repair state.
+        self._events: list[tuple[float, int, int, tuple]] = []
+        self._seq = itertools.count()
+        self._pending: dict[int, _PendingRepair] = {}
+        self._repair_ids = itertools.count()
+        #: day each node's repair lane frees up (finite-bandwidth mode).
+        self._repair_free_at: dict[int, float] = {}
+        #: simulation clock: the timestamp of the event being processed.
+        self._now = 0.0
+        self.n_repairs_planned = 0
+        self.n_repairs_completed = 0
+        self.n_repairs_aborted = 0
+        self.repaired_mb = 0.0
 
     # -- store path ---------------------------------------------------------
 
@@ -133,116 +216,190 @@ class Simulator:
         self.live_items[item.item_id] = si
         return si, record.overhead_s
 
+    # -- cluster membership ---------------------------------------------------
+
+    def add_node(self, node: StorageNode) -> int:
+        """Elastic join: the node becomes a placement/repair candidate for
+        every subsequent decision."""
+        nid = self.cluster.add_node(node)
+        self.nodes.append(node)
+        return nid
+
+    def heal_node(self, node_id: int) -> None:
+        """Fail-stop recovery: the node returns alive and empty."""
+        if self.cluster.alive[node_id]:
+            return
+        self.cluster.heal_node(node_id)
+        self._repair_free_at[node_id] = 0.0
+
     # -- failure path (§5.7) --------------------------------------------------
 
-    def fail_node(self, node_id: int) -> None:
-        """Fail-stop ``node_id``; reschedule lost chunks of affected items."""
-        if not self.cluster.alive[node_id]:
+    def fail_node(self, node_id: int, day: float = 0.0) -> None:
+        """Fail-stop ``node_id`` at time ``day``; plan repair (or drop)
+        for every affected item, including items whose in-flight repairs
+        this failure voids.  ``day`` is clamped to the simulation clock,
+        so direct mid-run callers can never book repair transfers in the
+        past."""
+        if node_id >= self.cluster.n_nodes or not self.cluster.alive[node_id]:
             return
+        day = max(float(day), self._now)
+        self.used_mb_at_failure[node_id] = float(self.cluster.used_mb[node_id])
         self.cluster.alive[node_id] = False
         self.cluster.used_mb[node_id] = 0.0
         self.n_node_failures += 1
+        # Two passes: first void every in-flight repair this failure
+        # touches (a reconstruction source or replacement target died),
+        # returning capacity reservations and unused lane time — only
+        # then re-plan.  Interleaving the two would let a re-plan book a
+        # lane window that a later void still occupies, leaving one lane
+        # with overlapping transfers.
+        affected: list[tuple[StoredItem, Optional[list[int]]]] = []
         for iid in list(self.live_items):
             si = self.live_items[iid]
-            if node_id in si.placement.node_ids:
-                self._reschedule(si, node_id)
+            pend = self._pending.get(iid)
+            if pend is not None:
+                if (
+                    node_id not in pend.plan.survivors
+                    and node_id not in pend.plan.new_nodes
+                ):
+                    continue
+                self.engine.abort_repair(pend.plan)
+                self._release_lanes(pend, day)
+                del self._pending[iid]
+                self.n_repairs_aborted += 1
+                affected.append(
+                    (si, [n for n in pend.plan.survivors if self.cluster.alive[n]])
+                )
+            elif node_id in si.placement.node_ids:
+                affected.append((si, None))
+        for si, survivors in affected:
+            self._repair_or_drop(si, day, survivors=survivors)
 
-    def _reschedule(self, si: StoredItem, failed_node: int) -> None:
-        pl = si.placement
-        survivors = [i for i in pl.node_ids if self.cluster.alive[i]]
-        lost = pl.n - len(survivors)
-        item = si.item
-        if pl.n - lost < pl.k:
-            # Fewer than K chunks survive: item is unrecoverable.
-            self._drop(si)
-            return
-        # Re-place the lost chunks; dynamic schedulers may also add parity.
-        chunk = si.chunk_mb
-        candidates = [
-            int(i)
-            for i in self.cluster.live_ids()
-            if i not in survivors and self.cluster.free_mb[i] >= chunk
-        ]
-        # Prefer the freest nodes (the dynamic algorithms' house style).
-        candidates.sort(key=lambda i: -self.cluster.free_mb[i])
-        new_map = list(survivors)
-        need = lost
-        for c in candidates:
-            if need == 0:
-                break
-            new_map.append(c)
-            need -= 1
-        if need > 0:
-            self._drop(si)
-            return
-        added_parity = 0
-        remaining = [c for c in candidates if c not in new_map]
-        while True:
-            fail = self.ctx.fail_probs(self.cluster, item.delta_t_days)[new_map]
-            mp = self.ctx.min_parity(fail, item.reliability_target)
-            if 0 <= mp <= pl.p + added_parity:
-                break
-            if not (self.config.allow_parity_growth and self._dynamic()) or not remaining:
-                self._drop(si)
-                return
-            new_map.append(remaining.pop(0))
-            added_parity += 1
-        # Commit replacement chunks.
-        new_nodes = [n for n in new_map if n not in survivors]
-        for n in new_nodes:
-            self.cluster.used_mb[n] += chunk
-        si.placement = Placement(
-            k=pl.k, p=pl.p + added_parity, node_ids=tuple(new_map)
+    def _repair_or_drop(
+        self,
+        si: StoredItem,
+        day: float,
+        survivors: Optional[list[int]] = None,
+    ) -> None:
+        plan = self.engine.plan_repair(
+            si.item,
+            si.placement,
+            chunk_mb=si.chunk_mb,
+            survivors=survivors,
+            allow_parity_growth=self.config.allow_parity_growth,
+            commit=True,
+            ctx=self.ctx,
         )
+        if not plan.ok:
+            self._drop(si, holding=plan.survivors)
+            return
+        self.n_repairs_planned += 1
+        if not plan.new_nodes:
+            si.placement = plan.placement
+            return
+        bw = self.config.repair_bw_mbps
+        if math.isinf(bw):
+            # Legacy instantaneous-repair model: chunks land now.
+            si.placement = plan.placement
+            self.n_repairs_completed += 1
+            self.repaired_mb += plan.repair_mb
+            return
+        # Finite repair budget: each replacement node ingests its chunk at
+        # ``bw`` MB/s, one transfer at a time per node; the repair
+        # completes when the slowest replacement lands.  Until then the
+        # item has only its surviving chunks.
+        finish = day
+        transfer_days = (si.chunk_mb / bw) / SECONDS_PER_DAY
+        transfers: dict[int, tuple[float, float]] = {}
+        for n in plan.new_nodes:
+            start = max(day, self._repair_free_at.get(n, 0.0))
+            end = start + transfer_days
+            self._repair_free_at[n] = end
+            transfers[n] = (start, end)
+            finish = max(finish, end)
+        rid = next(self._repair_ids)
+        self._pending[si.item.item_id] = _PendingRepair(rid, plan, finish, transfers)
+        self._push(finish, _P_REPAIR, ("repair", si.item.item_id, rid))
 
-    def _dynamic(self) -> bool:
-        """Declared capability, not name matching (§5.7: only adaptive
-        D-Rex-style schedulers may buy extra parity when rescheduling)."""
-        return scheduler_capabilities(self.scheduler).supports_parity_growth
+    def _release_lanes(self, pend: _PendingRepair, day: float) -> None:
+        """Return the un-run remainder of a voided repair's lane bookings
+        so later repairs don't queue behind phantom transfers.
 
-    def _drop(self, si: StoredItem) -> None:
-        for n in si.placement.node_ids:
+        Approximation: repairs already queued *behind* the voided
+        transfers keep their original (now conservative) completion
+        events — only reservations made after this point see the freed
+        lane time.  Dead nodes are skipped; their lanes reset on heal."""
+        for n, (start, end) in pend.transfers.items():
+            if not self.cluster.alive[n]:
+                continue
+            remaining = max(0.0, end - max(start, day))
+            if remaining > 0.0:
+                self._repair_free_at[n] = (
+                    self._repair_free_at.get(n, 0.0) - remaining
+                )
+
+    def _drop(self, si: StoredItem, holding: Sequence[int] | None = None) -> None:
+        """Permanently lose an item; ``holding`` names the nodes that
+        still carry its chunks (defaults to the full placement)."""
+        nodes = si.placement.node_ids if holding is None else holding
+        for n in nodes:
             if self.cluster.alive[n]:
                 self.cluster.used_mb[n] = max(
                     0.0, self.cluster.used_mb[n] - si.chunk_mb
                 )
         self.dropped_mb += si.item.size_mb
+        self._pending.pop(si.item.item_id, None)
         del self.live_items[si.item.item_id]
 
-    # -- main loop ------------------------------------------------------------
+    # -- event loop ------------------------------------------------------------
+
+    def _push(self, day: float, prio: int, payload: tuple) -> None:
+        heapq.heappush(self._events, (day, prio, next(self._seq), payload))
 
     def run(self, items: Sequence[DataItem]) -> SimResult:
-        schedule = sorted(self.config.failure_schedule)
-        sched_idx = 0
+        for day, nid in sorted(self.config.failure_schedule):
+            self._push(day, _P_FAIL, ("fail", nid))
+        for day, node in sorted(
+            self.config.node_join_schedule, key=lambda e: e[0]
+        ):
+            self._push(day, _P_JOIN, ("join", node))
+        for day, nid in sorted(self.config.node_heal_schedule):
+            self._push(day, _P_HEAL, ("heal", nid))
+        for item in items:
+            self._push(
+                item.arrival_time / SECONDS_PER_DAY, _P_ARRIVAL, ("arrival", item)
+            )
+
         stored: list[StoredItem] = []
         failed_ids: list[int] = []
         overheads: list[float] = []
         total_mb = 0.0
-        for item in items:
-            day = item.arrival_time / 86400.0
-            while sched_idx < len(schedule) and schedule[sched_idx][0] <= day:
-                _, nid = schedule[sched_idx]
+        while self._events:
+            day, _prio, _seq, payload = heapq.heappop(self._events)
+            self._now = max(self._now, day)
+            kind = payload[0]
+            if kind == "arrival":
+                item = payload[1]
+                total_mb += item.size_mb
+                si, ovh = self.store(item)
+                if self.config.measure_overhead:
+                    overheads.append(ovh)
+                if si is None:
+                    failed_ids.append(item.item_id)
+                else:
+                    stored.append(si)
+            elif kind == "fail":
+                nid = payload[1]
                 if nid < 0:
                     nid = self._draw_failing_node()
                 if nid is not None:
-                    self.fail_node(int(nid))
-                sched_idx += 1
-            total_mb += item.size_mb
-            si, ovh = self.store(item)
-            if self.config.measure_overhead:
-                overheads.append(ovh)
-            if si is None:
-                failed_ids.append(item.item_id)
-            else:
-                stored.append(si)
-        # Any failures scheduled after the last arrival still happen.
-        while sched_idx < len(schedule):
-            _, nid = schedule[sched_idx]
-            if nid < 0:
-                nid = self._draw_failing_node()
-            if nid is not None:
-                self.fail_node(int(nid))
-            sched_idx += 1
+                    self.fail_node(int(nid), day=day)
+            elif kind == "repair":
+                self._complete_repair(payload[1], payload[2])
+            elif kind == "join":
+                self.add_node(payload[1])
+            elif kind == "heal":
+                self.heal_node(int(payload[1]))
 
         stored_mb = float(sum(s.item.size_mb for s in stored))
         tsum = {
@@ -265,7 +422,22 @@ class Simulator:
             failed_item_ids=failed_ids,
             sched_overhead_s=overheads,
             n_node_failures=self.n_node_failures,
+            used_mb_at_failure=dict(self.used_mb_at_failure),
+            n_repairs_planned=self.n_repairs_planned,
+            n_repairs_completed=self.n_repairs_completed,
+            n_repairs_aborted=self.n_repairs_aborted,
+            repaired_mb=self.repaired_mb,
         )
+
+    def _complete_repair(self, item_id: int, repair_id: int) -> None:
+        pend = self._pending.get(item_id)
+        if pend is None or pend.repair_id != repair_id:
+            return  # stale event: the repair was aborted or the item dropped
+        si = self.live_items[item_id]
+        si.placement = pend.plan.placement
+        del self._pending[item_id]
+        self.n_repairs_completed += 1
+        self.repaired_mb += pend.plan.repair_mb
 
     def _draw_failing_node(self) -> Optional[int]:
         live = self.cluster.live_ids()

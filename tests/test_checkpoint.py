@@ -111,6 +111,40 @@ class TestRepair:
         ck.save(state, 1)
         assert ck.repair() == 0
 
+    def test_repair_raises_instead_of_silently_under_repairing(self):
+        """Regression: with fewer eligible live nodes than missing chunks
+        the old ``zip(missing, live)`` truncated silently, leaving groups
+        degraded with no error.  A 5-node fabric and EC(3,2) puts every
+        group on all 5 nodes; after one failure there are zero candidate
+        nodes, so strict repair must raise (and must not partially
+        re-map), while strict=False reports 0 chunks rebuilt."""
+        cfg, state = tiny_state()
+        fabric = StorageFabric(make_node_set("most_used", capacity_scale=1e-5)[:5])
+        ck = DRexCheckpointer(
+            fabric, "ec(3,2)",
+            CheckpointPolicy(item_mb=0.25, reliability_target=0.9),
+        )
+        ck.save(state, 1)
+        node_ids_before = [
+            tuple(gd["node_ids"])
+            for meta in ck._manifests[1]["leaves"] if meta is not None
+            for gd in meta["groups"]
+        ]
+        fabric.fail_node(0)
+        with pytest.raises(IOError, match="degraded"):
+            ck.repair()
+        assert ck.repair(strict=False) == 0
+        # No partial re-mapping happened behind the error.
+        node_ids_after = [
+            tuple(gd["node_ids"])
+            for meta in ck._manifests[1]["leaves"] if meta is not None
+            for gd in meta["groups"]
+        ]
+        assert node_ids_after == node_ids_before
+        # The data itself is still within P: restore works regardless.
+        restored, _ = ck.restore_latest(state)
+        assert states_equal(state, restored)
+
     def test_repaired_chunks_match_surviving_shape(self):
         """Regression: repair must re-encode the bucket-padded payload —
         otherwise replacement chunks differ in shape from survivors and

@@ -260,6 +260,128 @@ class TestTelemetry:
         assert all(r.ok for r in records)
 
 
+class TestRepairPlanning:
+    """PlacementEngine.plan_repair — the one repair policy (§5.7)."""
+
+    def _degrade(self, eng, item):
+        rec = eng.place(item)
+        assert rec.ok
+        dead = rec.placement.node_ids[0]
+        eng.cluster.used_mb[dead] = 0.0  # fail-stop loses the bytes
+        eng.cluster.alive[dead] = False
+        return rec, dead
+
+    def test_plan_replaces_lost_chunks_and_reserves_bytes(self):
+        eng = mk_engine("drex_lb")
+        item = mk_items(1)[0]
+        rec, dead = self._degrade(eng, item)
+        before = eng.cluster.used_mb.copy()
+        plan = eng.plan_repair(item, rec.placement, chunk_mb=rec.chunk_mb)
+        assert plan.ok and plan.committed
+        assert dead not in plan.placement.node_ids
+        assert len(plan.new_nodes) >= 1
+        assert set(plan.survivors) < set(plan.placement.node_ids)
+        for n in plan.new_nodes:
+            assert eng.cluster.used_mb[n] == pytest.approx(
+                before[n] + plan.chunk_mb
+            )
+        assert eng.stats["n_repairs_planned"] == 1
+        assert eng.stats["repair_mb_committed"] == pytest.approx(plan.repair_mb)
+
+    def test_noop_when_nothing_lost(self):
+        eng = mk_engine("drex_lb")
+        item = mk_items(1)[0]
+        rec = eng.place(item)
+        plan = eng.plan_repair(item, rec.placement, chunk_mb=rec.chunk_mb)
+        assert plan.ok and plan.new_nodes == ()
+        assert plan.placement == rec.placement
+
+    def test_unrecoverable_below_k_survivors(self):
+        eng = mk_engine("ec(3,2)")
+        item = mk_items(1)[0]
+        rec = eng.place(item)
+        for n in rec.placement.node_ids[:3]:  # K=3: only 2 survive
+            eng.cluster.alive[n] = False
+            eng.cluster.used_mb[n] = 0.0
+        plan = eng.plan_repair(item, rec.placement, chunk_mb=rec.chunk_mb)
+        assert not plan.ok and not plan.committed
+        assert "unrecoverable" in plan.reason
+        assert eng.stats["n_repairs_failed"] == 1
+
+    def test_capability_gates_parity_growth(self):
+        # High-AFR nodes + a seven-nines target: the degraded 3-node
+        # mapping cannot meet RT with P=1, so repair must buy parity —
+        # which only schedulers declaring supports_parity_growth may do.
+        from repro.core import DataItem, Placement
+
+        item = DataItem(0, 10.0, 0.0, 365.0, 0.99999)
+        pl = Placement(k=2, p=1, node_ids=(0, 1, 2))
+
+        ec = PlacementEngine(make_node_set("most_unreliable", 0.001), "ec(3,2)")
+        ec.cluster.alive[0] = False
+        static_plan = ec.plan_repair(item, pl, chunk_mb=5.0, commit=False)
+        assert not static_plan.ok
+        assert "reliability" in static_plan.reason
+
+        lb = PlacementEngine(make_node_set("most_unreliable", 0.001), "drex_lb")
+        lb.cluster.alive[0] = False
+        grown = lb.plan_repair(item, pl, chunk_mb=5.0, commit=False)
+        assert grown.ok and grown.added_parity >= 1
+        assert grown.placement.p == pl.p + grown.added_parity
+        assert not grown.committed
+        # The caller's flag gates too (SimConfig.allow_parity_growth=False).
+        denied = lb.plan_repair(
+            item, pl, chunk_mb=5.0, commit=False, allow_parity_growth=False
+        )
+        assert not denied.ok
+
+    def test_require_target_false_keeps_kp_best_effort(self):
+        from repro.core import DataItem, Placement
+
+        item = DataItem(0, 10.0, 0.0, 365.0, 0.99999)
+        pl = Placement(k=2, p=1, node_ids=(0, 1, 2))
+        eng = PlacementEngine(make_node_set("most_unreliable", 0.001), "ec(3,2)")
+        eng.cluster.alive[0] = False
+        plan = eng.plan_repair(
+            item, pl, chunk_mb=5.0, commit=False, require_target=False
+        )
+        assert plan.ok and plan.added_parity == 0
+        assert plan.placement.p == pl.p
+
+    def test_not_enough_capacity_reports(self):
+        eng = mk_engine("drex_lb")
+        item = mk_items(1)[0]
+        rec, _ = self._degrade(eng, item)
+        eng.cluster.used_mb[:] = eng.cluster.capacity_mb  # no room anywhere
+        plan = eng.plan_repair(item, rec.placement, chunk_mb=rec.chunk_mb)
+        assert not plan.ok
+        assert "not enough replacement capacity" in plan.reason
+
+    def test_abort_repair_returns_reservation(self):
+        eng = mk_engine("drex_lb")
+        item = mk_items(1)[0]
+        rec, _ = self._degrade(eng, item)
+        before = eng.cluster.used_mb.copy()
+        plan = eng.plan_repair(item, rec.placement, chunk_mb=rec.chunk_mb)
+        assert plan.committed
+        eng.abort_repair(plan)
+        np.testing.assert_allclose(eng.cluster.used_mb, before)
+        assert eng.stats["repair_mb_committed"] == pytest.approx(0.0)
+
+    def test_batch_context_amortizes_across_repairs(self):
+        eng = mk_engine("drex_lb")
+        items = mk_items(6)
+        recs = [eng.place(it) for it in items]
+        dead = recs[0].placement.node_ids[0]
+        eng.cluster.used_mb[dead] = 0.0
+        eng.cluster.alive[dead] = False
+        ctx = BatchContext()
+        for it, rec in zip(items, recs):
+            if dead in rec.placement.node_ids:
+                eng.plan_repair(it, rec.placement, chunk_mb=rec.chunk_mb, ctx=ctx)
+        assert ctx.hits > 0
+
+
 class TestParityFrontierKernel:
     def test_matches_per_prefix_cdf_scan(self):
         rng = np.random.default_rng(5)

@@ -1,0 +1,71 @@
+"""Focused tests for the workload-trace generators (`storage/traces.py`):
+volume standardization, item-count caps, and the §5.5 random-nines
+reliability-target bounds across seeds."""
+
+import numpy as np
+import pytest
+
+from repro.storage.traces import (
+    DATASET_NAMES,
+    _SPECS,
+    make_trace,
+    random_reliability_targets,
+)
+
+
+class TestTotalMbTrimming:
+    @pytest.mark.parametrize("name", ["meva", "sentinel2"])
+    def test_stops_at_target_volume(self, name):
+        target = 30_000.0
+        items = make_trace(name, seed=3, total_mb=target)
+        total = sum(i.size_mb for i in items)
+        # Reaches the target...
+        assert total >= target
+        # ...with minimal overshoot: dropping the last item goes under.
+        assert total - items[-1].size_mb < target
+
+    def test_tiny_target_yields_single_item(self):
+        items = make_trace("meva", seed=0, total_mb=1e-3)
+        assert len(items) == 1
+
+    def test_trimming_is_deterministic(self):
+        a = make_trace("meva", seed=11, total_mb=20_000.0)
+        b = make_trace("meva", seed=11, total_mb=20_000.0)
+        assert [i.size_mb for i in a] == [i.size_mb for i in b]
+
+
+class TestNItemsCap:
+    @pytest.mark.parametrize("name", DATASET_NAMES)
+    @pytest.mark.parametrize("n", [1, 100, 1500])
+    def test_caps_exactly(self, name, n):
+        items = make_trace(name, seed=0, n_items=n)
+        assert len(items) == n
+
+    def test_item_ids_are_sequential(self):
+        items = make_trace("meva", seed=0, n_items=50)
+        assert [i.item_id for i in items] == list(range(50))
+
+    def test_default_count_matches_table3(self):
+        items = make_trace("meva", seed=0)
+        assert len(items) == _SPECS["meva"].n_items
+
+
+class TestRandomNinesBounds:
+    @pytest.mark.parametrize("seed", [0, 1, 7, 42, 1234])
+    def test_within_section_5_5_bounds_across_seeds(self, seed):
+        rng = np.random.default_rng(seed)
+        rts = random_reliability_targets(5_000, rng)
+        # §5.5: f(-1)=90% is the floor; f(5)=99.99999% (seven nines) the
+        # ceiling; RT is a probability in (0, 1).
+        assert rts.min() >= 0.90
+        assert rts.max() <= 0.9999999 + 1e-12
+        assert np.all((rts > 0.0) & (rts < 1.0))
+
+    def test_trace_reliability_modes(self):
+        fixed = make_trace("meva", seed=0, n_items=20, reliability=0.95)
+        assert all(i.reliability_target == 0.95 for i in fixed)
+        nines = make_trace("meva", seed=0, n_items=2000)
+        rts = np.array([i.reliability_target for i in nines])
+        assert rts.min() >= 0.90 and rts.max() <= 0.9999999 + 1e-12
+        with pytest.raises(ValueError, match="reliability mode"):
+            make_trace("meva", seed=0, n_items=5, reliability="bogus")
