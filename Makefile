@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify test smoke-bench
+.PHONY: verify test test-fast smoke-bench
 
 ## Tier-1 gate: full test suite + smoke runs of the scheduling-overhead
 ## benchmark (batched place_many end to end) and the Fig. 12 failure
@@ -10,6 +10,12 @@ verify: test smoke-bench
 
 test:
 	$(PYTHON) -m pytest -x -q
+
+## Quick-feedback lane (< 30 s): everything except the @pytest.mark.slow
+## model/e2e sweeps — covers the reliability kernel, schedulers, engine,
+## SC-kernel equivalence, invariant suite, simulator and traces.
+test-fast:
+	$(PYTHON) -m pytest -x -q -m "not slow"
 
 smoke-bench:
 	$(PYTHON) -m benchmarks.run --only table2,fig12 --smoke

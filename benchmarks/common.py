@@ -66,6 +66,37 @@ def matched_throughput(res_by_algo: dict, base: str, other: str) -> float:
     return thr(a) - thr(b)
 
 
+def sc_scalar_vs_vectorized(engine_factory, items) -> dict:
+    """Scalar-oracle vs vectorized-kernel scheduling overhead for D-Rex SC.
+
+    ``engine_factory()`` must return a fresh ``PlacementEngine`` running
+    a ``drex_sc`` scheduler on an identical cluster each call.  Times the
+    sequential scalar oracle (``use_kernel=False``) against the batched
+    vectorized ``place_many`` path (jit cache warmed on a throwaway
+    engine first), asserts the decisions are identical, and returns the
+    per-item overhead columns.
+    """
+    sca = engine_factory()
+    sca.scheduler.use_kernel = False
+    t0 = time.perf_counter()
+    want = [sca.place(it).placement for it in items]
+    t_scalar = time.perf_counter() - t0
+
+    engine_factory().place_many(items)  # warm the jit cache
+    vec = engine_factory()
+    t0 = time.perf_counter()
+    got = [r.placement for r in vec.place_many(items)]
+    t_vec = time.perf_counter() - t0
+    if want != got:
+        raise AssertionError("vectorized SC diverged from the scalar oracle")
+    return {
+        "n_items": len(items),
+        "scalar_ms_per_item": t_scalar / len(items) * 1e3,
+        "vectorized_ms_per_item": t_vec / len(items) * 1e3,
+        "speedup_vs_scalar": t_scalar / t_vec if t_vec > 0 else float("inf"),
+    }
+
+
 def emit(name: str, payload: dict) -> None:
     RESULTS.mkdir(parents=True, exist_ok=True)
     (RESULTS / f"{name}.json").write_text(json.dumps(payload, indent=2))

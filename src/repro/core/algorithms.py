@@ -21,10 +21,11 @@ argument memoizes frontiers across items so the DP cost amortizes.
 from __future__ import annotations
 
 import math
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
+from . import sc_kernel
 from .registry import (
     create_scheduler,
     get_spec,
@@ -328,19 +329,182 @@ def saturation_score(projected_used_mb, capacity_mb, smin_mb, n_nodes: int = 10)
     return np.clip(inv_l * np.exp(math.log(max(2, n_nodes)) * u), 0.0, 1.0)
 
 
-@register_scheduler("drex_sc", adaptive=True, supports_parity_growth=True)
+@register_scheduler(
+    "drex_sc", adaptive=True, supports_parity_growth=True, batch_scoring=True
+)
 class DRexSC(Scheduler):
     """System-capacity-aware scheduler (Alg. 2): Pareto front over
-    {duration, storage, saturation} with saturation-weighted scoring."""
+    {duration, storage, saturation} with saturation-weighted scoring.
+
+    Two implementations of the same decision function:
+
+    * :meth:`place_scalar` — the reference numpy oracle: a Python loop
+      over window starts, one lazily-extended :class:`ParityFrontier`
+      per start.
+    * the jitted jax kernel (:mod:`repro.core.sc_kernel`) — the whole
+      (starts x window-lengths) grid scored as one tensor program, and
+      :meth:`place_batch` vmaps it over many items sharing a cluster
+      snapshot (consumed by ``PlacementEngine.place_many``).
+
+    ``place`` uses the kernel when jax is importable and the cluster is
+    large enough for the kernel to win over numpy dispatch
+    (``KERNEL_MIN_NODES``; batches of >= 4 items always use it); set
+    ``use_kernel = False`` to force the oracle.  Decisions are
+    equivalent by construction and pinned by tests/test_sc_vectorized.py.
+    """
 
     name = "drex_sc"
     MAX_MAPPINGS = 2**10
+    #: force the scalar numpy oracle even when jax is present.
+    use_kernel = True
+    #: below this many live nodes a single-item kernel call is dispatch-
+    #: bound and the numpy oracle wins; batches amortize dispatch and use
+    #: the kernel regardless (measured crossover, benchmarks/table2).
+    #: Set to 0 to force the kernel everywhere (equivalence tests do).
+    KERNEL_MIN_NODES = 16
 
     def __init__(self, time_model: ECTimeModel | None = None):
         self.time_model = time_model or ECTimeModel()
 
+    def _kernel_wins(self, cluster: ClusterView, batch: int) -> bool:
+        if not (self.use_kernel and sc_kernel.kernel_available()):
+            return False
+        if batch >= 4:
+            return True
+        return int(np.count_nonzero(cluster.alive)) >= self.KERNEL_MIN_NODES
+
     def place(self, item: DataItem, cluster: ClusterView, ctx=None) -> Decision:
         self.observe_item(item)
+        if self._kernel_wins(cluster, 1):
+            smin = self.smin_mb if self.smin_mb is not None else 1.0
+            return self._place_kernel([item], [smin], cluster, ctx)[0]
+        return self._place_scalar(item, cluster, ctx)
+
+    def place_batch(
+        self, items: Sequence[DataItem], cluster: ClusterView, ctx=None
+    ) -> list[Decision]:
+        """Score ``items`` against the *current* cluster snapshot in one
+        vmapped kernel call.
+
+        Pure: scheduler state (``smin_mb``) is not mutated — each item is
+        scored with the running smallest-size anchor it would see under
+        sequential ``place`` calls, and the consumer (the engine's
+        batched ``place_many``) calls :meth:`observe_item` as it commits
+        to a decision.  Decisions are valid only while the cluster is
+        unchanged: any commit invalidates the remaining items of the
+        batch, which must be re-scored against the post-commit state.
+        """
+        run = self.smin_mb
+        smins: list[float] = []
+        for it in items:
+            if it.size_mb > 0:
+                run = it.size_mb if run is None else min(run, it.size_mb)
+            smins.append(run if run is not None else 1.0)
+        if self._kernel_wins(cluster, len(items)):
+            return self._place_kernel(list(items), smins, cluster, ctx)
+        saved = self.smin_mb
+        try:
+            out = []
+            for it, sm in zip(items, smins):
+                self.smin_mb = sm
+                out.append(self._place_scalar(it, cluster, ctx))
+            return out
+        finally:
+            self.smin_mb = saved
+
+    def place_scalar(
+        self, item: DataItem, cluster: ClusterView, ctx=None
+    ) -> Decision:
+        """Reference numpy oracle (kept for equivalence tests/benchmarks)."""
+        self.observe_item(item)
+        return self._place_scalar(item, cluster, ctx)
+
+    # -- vectorized path ----------------------------------------------------
+
+    def _place_kernel(
+        self,
+        items: list[DataItem],
+        smins: Sequence[float],
+        cluster: ClusterView,
+        ctx,
+    ) -> list[Decision]:
+        by_free = self._live_sorted(cluster, cluster.free_mb)  # line 1
+        L = len(by_free)
+        if L < 2:
+            return [Decision(None, 0, "fewer than 2 live nodes") for _ in items]
+        live = cluster.live_ids()
+        used, cap = cluster.used_mb, cluster.capacity_mb
+        probs_mat = np.empty((len(items), L), dtype=np.float64)
+        for row, item in enumerate(items):
+            probs_mat[row] = self._fail_probs(cluster, item, ctx)[by_free]
+        # The saturation baseline and system saturation depend only on the
+        # item's smin anchor; batches rarely move the running min, so
+        # compute once per distinct value (numpy, bit-matching the oracle).
+        base_cache: dict[float, tuple[float, float]] = {}
+        fbase = np.empty(len(items))
+        ssat = np.empty(len(items))
+        for row, smin in enumerate(smins):
+            got = base_cache.get(smin)
+            if got is None:
+                f_base_sum = float(
+                    saturation_score(used[live], cap[live], smin, L).sum()
+                )
+                sys_sat = float(
+                    saturation_score(
+                        np.array([used[live].sum()]),
+                        np.array([cap[live].sum()]),
+                        smin,
+                        L,
+                    )[0]
+                )
+                got = (f_base_sum, sys_sat)
+                base_cache[smin] = got
+            fbase[row], ssat[row] = got
+        tm = self.time_model
+        ok, s, n, k, p = sc_kernel.score_windows_batch(
+            probs_mat,
+            np.array([it.size_mb for it in items], dtype=np.float64),
+            np.array([it.reliability_target for it in items], dtype=np.float64),
+            np.asarray(smins, dtype=np.float64),
+            fbase,
+            ssat,
+            cluster.free_mb[by_free],
+            cluster.write_bw[by_free],
+            cluster.read_bw[by_free],
+            used[by_free],
+            cap[by_free],
+            self.MAX_MAPPINGS,
+            (tm.e0, tm.e_byte, tm.e_mult, tm.d0, tm.d_byte, tm.d_mult),
+        )
+        considered = min(L * (L - 1) // 2, self.MAX_MAPPINGS)
+        decisions = []
+        for row in range(len(items)):
+            if not ok[row]:
+                decisions.append(
+                    Decision(
+                        None, considered, "no mapping satisfies reliability+capacity"
+                    )
+                )
+                continue
+            s_r, n_r = int(s[row]), int(n[row])
+            decisions.append(
+                Decision(
+                    Placement(
+                        k=int(k[row]),
+                        p=int(p[row]),
+                        node_ids=tuple(int(x) for x in by_free[s_r : s_r + n_r]),
+                    ),
+                    considered,
+                    "",
+                )
+            )
+        return decisions
+
+    # -- scalar oracle ------------------------------------------------------
+
+    def _place_scalar(
+        self, item: DataItem, cluster: ClusterView, ctx=None
+    ) -> Decision:
         by_free = self._live_sorted(cluster, cluster.free_mb)  # line 1
         L = len(by_free)
         if L < 2:

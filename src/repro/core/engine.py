@@ -59,6 +59,18 @@ class BatchContext:
     the context freely without changing their decisions.  The context
     assumes node failure *rates* are constant while it lives (occupancy
     and liveness may change freely); discard it if AFRs are edited.
+
+    **Commit staleness.** Content keying is what makes the context safe
+    across the commits of a batch: a committed placement changes free
+    space, which changes the free-desc node ordering the prefix-greedy
+    schedulers sort by, which changes the permuted failure-probability
+    sequence that *is* the frontier cache key — so the Nth item of a
+    batch can never be served a frontier computed against pre-commit
+    free space unless the orderings (and hence the DPs) are genuinely
+    identical, in which case reuse is exact.  Quantities that depend on
+    occupancy itself (capacity fits, saturation, balance penalties) are
+    never cached here; schedulers always read them fresh from the view.
+    Pinned by ``TestBatchStaleness`` in tests/test_engine.py.
     """
 
     #: default bound on cached entries per cache; content keys churn with
@@ -199,7 +211,10 @@ class PlacementEngine:
             decision = self.scheduler.place(item, self.cluster, ctx=ctx)
         else:
             decision = self.scheduler.place(item, self.cluster)
-        overhead = time.perf_counter() - t0
+        return self._finalize(item, decision, time.perf_counter() - t0)
+
+    def _finalize(self, item: DataItem, decision, overhead: float) -> PlacementRecord:
+        """Turn a scheduler decision into a committed record + telemetry."""
         self.stats["overhead_s"] += overhead
         if decision.placement is None:
             self.stats["n_rejected"] += 1
@@ -240,24 +255,104 @@ class PlacementEngine:
     ) -> list[PlacementRecord]:
         """Place a batch in arrival order under one shared context.
 
-        Decisions are identical to calling :meth:`place` per item (the
-        context only memoizes pure computations), but the reliability-DP
-        cost amortizes across the batch.  With ``atomic=True`` the whole
-        batch is rolled back if any item is rejected (records then carry
-        ``committed=False``).
+        Decisions are identical to calling :meth:`place` per item, but
+        the batch amortizes two ways:
+
+        * the shared :class:`BatchContext` memoizes pure derived
+          quantities (failure probabilities, parity frontiers) across
+          items, and
+        * schedulers declaring the ``batch_scoring`` capability are
+          driven through :meth:`Scheduler.place_batch`, which scores many
+          queued items against one cluster snapshot in a single
+          vectorized call.  A committed placement changes the snapshot,
+          so any decisions scored for later items are *stale* and are
+          re-scored against the post-commit state (see
+          :meth:`_place_many_batched`) — batched placement never reuses a
+          score computed against pre-commit free space.
+
+        With ``atomic=True`` the whole batch is rolled back if any item
+        is rejected (records then carry ``committed=False``).
         """
         ctx = ctx or BatchContext()
         snap = self.snapshot()
         records: list[PlacementRecord] = []
+        batched = self.capabilities.batch_scoring and hasattr(
+            self.scheduler, "place_batch"
+        )
         try:
-            for item in items:
-                records.append(self.place(item, ctx=ctx))
+            if batched:
+                records = self._place_many_batched(list(items), ctx)
+            else:
+                for item in items:
+                    records.append(self.place(item, ctx=ctx))
         except Exception:
             self.rollback(snap)
             raise
         if atomic and not all(r.ok for r in records):
             self.rollback(snap)
             records = [dataclasses.replace(r, committed=False) for r in records]
+        return records
+
+    #: upper bound on items scored per place_batch call: beyond this a
+    #: vectorized scorer's per-item working set (e.g. the SC kernel's
+    #: pairwise Pareto matrices) dominates memory, and a single commit
+    #: would discard the whole group's scores anyway.
+    MAX_SCORING_GROUP = 64
+
+    def _place_many_batched(
+        self, items: list[DataItem], ctx: BatchContext
+    ) -> list[PlacementRecord]:
+        """Batch placement via ``Scheduler.place_batch``.
+
+        The scheduler scores a group of items against the current
+        cluster snapshot in one vectorized call; decisions are consumed
+        in arrival order until a commit mutates the cluster, at which
+        point the remaining scores were computed against pre-commit
+        state and are discarded — those items are re-scored against the
+        post-commit snapshot on the next iteration.  Group size adapts:
+        commit-heavy workloads degrade to per-item kernel calls (still
+        vectorized over windows), while non-committing engines
+        (``auto_commit=False``, the Table-2 protocol) score the whole
+        queue in ~one call.  Results are bit-identical to sequential
+        :meth:`place`.
+        """
+        records: list[PlacementRecord] = []
+        i, n = 0, len(items)
+        chunk = min(n, self.MAX_SCORING_GROUP) if not self.auto_commit else 1
+        while i < n:
+            group = items[i : i + chunk]
+            t0 = time.perf_counter()
+            decisions = self.scheduler.place_batch(group, self.cluster, ctx=ctx)
+            elapsed = time.perf_counter() - t0
+            if len(decisions) != len(group):
+                raise RuntimeError(
+                    f"{self.scheduler.name}.place_batch returned "
+                    f"{len(decisions)} decisions for {len(group)} items"
+                )
+            per_item = elapsed / len(group)
+            used = 0
+            committed = False
+            for item, decision in zip(group, decisions):
+                # place_batch is pure; the scheduler observes the item
+                # only as its decision is consumed (matching sequential
+                # place, where observation precedes the item's scoring).
+                self.scheduler.observe_item(item)
+                records.append(self._finalize(item, decision, per_item))
+                used += 1
+                if records[-1].committed:
+                    committed = True
+                    if used < len(group):
+                        break  # remaining scores are pre-commit: rescore
+            i += used
+            # Per-record overhead is the amortized share of the scoring
+            # call; scores discarded by a mid-group commit still cost
+            # wall time, so charge the unconsumed share to the aggregate
+            # gauge (stats['overhead_s'] tracks real scheduling time).
+            self.stats["overhead_s"] += elapsed - used * per_item
+            if committed:
+                chunk = 1
+            elif used == len(group) and i < n:
+                chunk = min(chunk * 2, self.MAX_SCORING_GROUP, n - i)
         return records
 
     # -- repair ---------------------------------------------------------------

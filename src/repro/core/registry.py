@@ -56,6 +56,12 @@ class SchedulerCapabilities:
     #: placement depends on an RNG seed (mapping not a pure function of
     #: the cluster state alone).
     randomized: bool = False
+    #: provides ``place_batch(items, cluster, ctx)``: scores a whole batch
+    #: against one cluster snapshot in a single vectorized call, returning
+    #: decisions identical to sequential ``place`` while the cluster is
+    #: unchanged.  Consumed by ``PlacementEngine.place_many`` (which
+    #: re-scores items invalidated by a commit); never match on names.
+    batch_scoring: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +82,7 @@ def register_scheduler(
     adaptive: bool = False,
     supports_parity_growth: bool = False,
     randomized: bool = False,
+    batch_scoring: bool = False,
     doc: str = "",
 ):
     """Class/factory decorator adding one named algorithm to the registry.
@@ -88,6 +95,7 @@ def register_scheduler(
         adaptive=adaptive,
         supports_parity_growth=supports_parity_growth,
         randomized=randomized,
+        batch_scoring=batch_scoring,
     )
 
     def deco(factory):
@@ -112,6 +120,7 @@ def register_scheduler_family(
     adaptive: bool = False,
     supports_parity_growth: bool = False,
     randomized: bool = False,
+    batch_scoring: bool = False,
     doc: str = "",
 ):
     """Register a parameterized family, e.g. ``ec(K,P)``.
@@ -124,6 +133,7 @@ def register_scheduler_family(
         adaptive=adaptive,
         supports_parity_growth=supports_parity_growth,
         randomized=randomized,
+        batch_scoring=batch_scoring,
     )
 
     def deco(factory):

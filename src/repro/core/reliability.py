@@ -203,6 +203,51 @@ class ParityFrontier:
             return -1
         return int(self.upto(n)[n - 1])
 
+    def upto_many(
+        self, n_starts: int | None = None, nmax: int | None = None
+    ) -> np.ndarray:
+        """Batch variant of :meth:`upto` over *suffix starts*.
+
+        ``out[s, m]`` is the smallest parity meeting ``target`` for the
+        window ``probs[s : s + m + 1]`` (the length-``m+1`` prefix of the
+        suffix starting at ``s``), or ``-1`` when infeasible or out of
+        range.  One masked Poisson-binomial DP advances every suffix's
+        distribution in lockstep, answering every ``(start,
+        window-length)`` pair in ``O(n_starts * L^2)`` instead of one
+        fresh DP per start.  This is the numpy reference twin of the
+        in-jit DP in :mod:`repro.core.sc_kernel` (D-Rex SC's window
+        enumeration): the property tests cross-check it against
+        brute-force enumeration and against :meth:`upto`, pinning both
+        implementations of the suffix-frontier recurrence.
+
+        ``n_starts`` bounds the suffix starts (default: every start);
+        ``nmax`` bounds the window length (default: unbounded).
+        """
+        L = len(self)
+        S = L if n_starts is None else max(0, min(int(n_starts), L))
+        W = L if nmax is None else max(0, min(int(nmax), L))
+        out = np.full((S, W), -1, dtype=np.int64)
+        if S == 0 or W == 0:
+            return out
+        starts = np.arange(S)
+        dp = np.zeros((S, L + 1), dtype=np.float64)
+        dp[:, 0] = 1.0
+        rows = np.arange(S)
+        for i in range(min(L, S - 1 + W)):
+            pi = self.probs[i]
+            # Window [s..i] exists once i >= s and stays within nmax.
+            active = (starts <= i) & (i - starts < W)
+            nd = dp * (1.0 - pi)
+            nd[:, 1:] += dp[:, :-1] * pi
+            dp = np.where(active[:, None], nd, dp)
+            cdf = np.cumsum(dp, axis=1)
+            feas = cdf >= self.target
+            j = np.argmax(feas, axis=1)
+            n_len = i - starts + 1
+            ok = active & feas.any(axis=1) & (j <= n_len - 1)
+            out[rows[ok], (i - starts)[ok]] = j[ok]
+        return out
+
 
 def parity_frontier(sorted_fail_probs, target: float) -> np.ndarray:
     """Vectorized one-pass frontier: ``out[n-1]`` is the min parity for

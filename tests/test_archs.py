@@ -22,6 +22,10 @@ from repro.models import (
     prefill,
 )
 
+# Per-architecture forward/train smoke sweeps: full lane only (deselect
+# via -m "not slow").
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def rng():

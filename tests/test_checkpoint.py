@@ -15,6 +15,9 @@ from repro.optim import AdamWConfig
 from repro.storage import make_node_set
 from repro.train import Trainer, TrainerConfig, init_train_state
 
+# checkpoint save/restore e2e: full lane only (deselect via -m "not slow").
+pytestmark = pytest.mark.slow
+
 
 def small_fabric(scale=1e-5):
     return StorageFabric(make_node_set("most_used", capacity_scale=scale))

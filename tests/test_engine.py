@@ -20,6 +20,7 @@ from repro.core import (
     poisson_binomial_cdf,
     scheduler_capabilities,
     scheduler_names,
+    StorageNode,
 )
 from repro.storage import make_node_set, make_trace
 
@@ -380,6 +381,95 @@ class TestRepairPlanning:
             if dead in rec.placement.node_ids:
                 eng.plan_repair(it, rec.placement, chunk_mb=rec.chunk_mb, ctx=ctx)
         assert ctx.hits > 0
+
+
+class TestBatchStaleness:
+    """``place_many`` memoization/scoring must key on *post-commit*
+    cluster state: the Nth item of a batch can never reuse a frontier or
+    window score computed against pre-commit free space (see the
+    BatchContext docstring)."""
+
+    def _filling_setup(self):
+        # One node towers over the rest in free space, so every scheduler
+        # that sorts by free space targets it first; the batch's items
+        # are sized to fill it mid-batch, flipping the sort order (and
+        # with it the frontier cache keys) between commits.
+        nodes = [
+            StorageNode(0, 4_000.0, 200.0, 250.0, 0.02),
+            StorageNode(1, 2_500.0, 180.0, 240.0, 0.03),
+            StorageNode(2, 2_400.0, 190.0, 230.0, 0.01),
+            StorageNode(3, 2_300.0, 170.0, 220.0, 0.04),
+            StorageNode(4, 2_200.0, 160.0, 210.0, 0.02),
+            StorageNode(5, 2_100.0, 150.0, 200.0, 0.03),
+        ]
+        items = [DataItem(i, 900.0, float(i), 365.0, 0.9) for i in range(12)]
+        return nodes, items
+
+    @pytest.mark.parametrize("name", ["drex_sc", "drex_lb", "greedy_least_used"])
+    def test_batch_that_fills_a_node_matches_sequential(self, name):
+        nodes, items = self._filling_setup()
+        seq = PlacementEngine(ClusterView.from_nodes(nodes), name)
+        want = [seq.place(it).placement for it in items]
+        bat = PlacementEngine(ClusterView.from_nodes(nodes), name)
+        ctx = BatchContext()
+        got = [r.placement for r in bat.place_many(items, ctx=ctx)]
+        assert got == want
+        np.testing.assert_array_equal(seq.cluster.used_mb, bat.cluster.used_mb)
+        # The free-space ordering changed mid-batch, so placements cannot
+        # all target the same node set — i.e. later items really did see
+        # post-commit state rather than the batch-start snapshot.
+        mapped = {pl.node_ids for pl in got if pl is not None}
+        assert len(mapped) > 1
+
+    def test_no_node_exceeds_capacity_under_batching(self):
+        # If the Nth item reused a pre-commit frontier/score, the freest
+        # node would be oversubscribed; the engine's validator would
+        # raise and this loop would not complete.
+        nodes, items = self._filling_setup()
+        eng = PlacementEngine(ClusterView.from_nodes(nodes), "drex_sc")
+        eng.place_many(items)
+        assert np.all(eng.cluster.used_mb <= eng.cluster.capacity_mb + 1e-9)
+
+    def test_mixed_rejects_and_commits_match_sequential(self):
+        # Exercises the batched path's adaptive regrouping: rejected
+        # items do not invalidate scores, committed ones do.
+        nodes, items = self._filling_setup()
+        too_big = DataItem(99, 1e9, 0.0, 365.0, 0.9)
+        mixed = [too_big, items[0], too_big, items[1], items[2], too_big]
+        seq = PlacementEngine(ClusterView.from_nodes(nodes), "drex_sc")
+        want = [seq.place(it).placement for it in mixed]
+        bat = PlacementEngine(ClusterView.from_nodes(nodes), "drex_sc")
+        got = [r.placement for r in bat.place_many(mixed)]
+        assert got == want
+        np.testing.assert_array_equal(seq.cluster.used_mb, bat.cluster.used_mb)
+
+    def test_noncommitting_engine_scores_whole_batch_against_snapshot(self):
+        # auto_commit=False never mutates the view, so nothing is stale
+        # and batch == sequential trivially; pin that too.
+        nodes, items = self._filling_setup()
+        seq = PlacementEngine(ClusterView.from_nodes(nodes), "drex_sc", auto_commit=False)
+        want = [seq.place(it).placement for it in items]
+        bat = PlacementEngine(ClusterView.from_nodes(nodes), "drex_sc", auto_commit=False)
+        got = [r.placement for r in bat.place_many(items)]
+        assert got == want
+
+    def test_short_place_batch_return_raises_instead_of_spinning(self):
+        # A batch-scoring scheduler violating the one-decision-per-item
+        # contract must fail loudly, not hang the regrouping loop.
+        nodes, items = self._filling_setup()
+        eng = PlacementEngine(ClusterView.from_nodes(nodes), "drex_sc")
+        eng.scheduler.place_batch = lambda its, cluster, ctx=None: []
+        with pytest.raises(RuntimeError, match="place_batch returned"):
+            eng.place_many(items)
+
+    def test_batched_overhead_gauge_covers_discarded_scores(self):
+        # Scores discarded by mid-group commits still cost wall time;
+        # the aggregate gauge must not under-count relative to the
+        # per-record amortized shares.
+        nodes, items = self._filling_setup()
+        eng = PlacementEngine(ClusterView.from_nodes(nodes), "drex_sc")
+        records = eng.place_many(items)
+        assert eng.stats["overhead_s"] >= sum(r.overhead_s for r in records) - 1e-9
 
 
 class TestParityFrontierKernel:

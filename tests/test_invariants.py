@@ -1,0 +1,196 @@
+"""Registry-driven scheduler invariant suite.
+
+Every scheduler the registry knows about — including family members and
+any scheduler a future PR registers — is swept over randomized clusters
+and items, and its *accepted* placements are checked against Problem 1's
+write-success constraints:
+
+* the mapping uses distinct, live nodes only;
+* every mapped node has free capacity for the chunk;
+* the reliability target holds per the shared Poisson-binomial DP
+  kernel (``min_parity_for_target`` / ``pr_avail``);
+* engine rollback restores the ``ClusterView`` byte-for-byte.
+
+Behavioral branches key on **capability flags only** (``adaptive``,
+``randomized``, ``batch_scoring``) — never on scheduler names, so the
+suite extends automatically to new registrations.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BatchContext,
+    ClusterView,
+    DataItem,
+    PlacementEngine,
+    SCHEDULER_NAMES,
+    StorageNode,
+    create_scheduler,
+    get_spec,
+    scheduler_names,
+)
+from repro.core.reliability import min_parity_for_target, pr_avail
+
+# Materialized registry sweep: SCHEDULER_NAMES resolves the paper's nine
+# (incl. the ec(K,P) family members) into the registry at import time;
+# scheduler_names() then yields every registration.
+ALL_REGISTERED = sorted(set(scheduler_names()) | set(SCHEDULER_NAMES))
+
+
+def random_cluster(seed: int, n_lo: int = 5, n_hi: int = 14) -> ClusterView:
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(n_lo, n_hi + 1))
+    nodes = [
+        StorageNode(
+            node_id=i,
+            capacity_mb=float(rng.uniform(2e3, 1e5)),
+            write_bw=float(rng.uniform(50, 400)),
+            read_bw=float(rng.uniform(50, 450)),
+            annual_failure_rate=float(rng.uniform(0.001, 0.2)),
+            used_mb=float(rng.uniform(0.0, 1e3)),
+        )
+        for i in range(n)
+    ]
+    view = ClusterView.from_nodes(nodes)
+    # Kill up to two random nodes so liveness is part of the invariant.
+    for dead in rng.choice(n, size=int(rng.integers(0, 3)), replace=False):
+        view.fail_node(int(dead))
+    return view
+
+
+def random_items(seed: int, count: int = 8) -> list[DataItem]:
+    rng = np.random.default_rng(seed + 10_000)
+    targets = [0.9, 0.99, 0.999, 0.99999]
+    return [
+        DataItem(
+            item_id=i,
+            size_mb=float(rng.uniform(1.0, 500.0)),
+            arrival_time=float(i),
+            delta_t_days=float(rng.uniform(30.0, 730.0)),
+            reliability_target=targets[int(rng.integers(len(targets)))],
+        )
+        for i in range(count)
+    ]
+
+
+SEEDS = [0, 1, 2]
+
+
+@pytest.mark.parametrize("name", ALL_REGISTERED)
+@pytest.mark.parametrize("seed", SEEDS)
+class TestAcceptedPlacementInvariants:
+    """Constraints every accepted placement must satisfy, per scheduler."""
+
+    def _records(self, name, seed):
+        engine = PlacementEngine(
+            random_cluster(seed), create_scheduler(name), auto_commit=False
+        )
+        items = random_items(seed)
+        # auto_commit=False: the cluster is frozen, so constraints can be
+        # checked against exactly the state the scheduler saw.
+        return engine, items, [engine.place(it) for it in items]
+
+    def test_mappings_use_distinct_live_nodes_with_capacity(self, name, seed):
+        engine, items, records = self._records(name, seed)
+        cluster = engine.cluster
+        for item, rec in zip(items, records):
+            if not rec.ok:
+                continue
+            pl = rec.placement
+            ids = np.asarray(pl.node_ids)
+            assert len(set(pl.node_ids)) == pl.n
+            assert np.all(cluster.alive[ids]), f"{name} mapped a dead node"
+            chunk = pl.chunk_size_mb(item.size_mb)
+            assert np.all(cluster.free_mb[ids] >= chunk - 1e-9), (
+                f"{name} violated capacity"
+            )
+
+    def test_reliability_target_met_per_shared_dp_kernel(self, name, seed):
+        engine, items, records = self._records(name, seed)
+        cluster = engine.cluster
+        for item, rec in zip(items, records):
+            if not rec.ok:
+                continue
+            pl = rec.placement
+            fp = cluster.fail_probs(item.delta_t_days)[list(pl.node_ids)]
+            mp = min_parity_for_target(fp, item.reliability_target)
+            assert mp is not None and mp <= pl.p, (
+                f"{name}: P={pl.p} but DP kernel needs {mp}"
+            )
+            assert (
+                pr_avail(fp, pl.p) >= item.reliability_target - 1e-12
+            )
+
+    def test_rollback_restores_cluster_byte_for_byte(self, name, seed):
+        engine = PlacementEngine(random_cluster(seed), create_scheduler(name))
+        snap = engine.snapshot()
+        used_bytes = engine.cluster.used_mb.tobytes()
+        alive_bytes = engine.cluster.alive.tobytes()
+        stats0 = dict(engine.stats)
+        engine.place_many(random_items(seed))
+        engine.rollback(snap)
+        assert engine.cluster.used_mb.tobytes() == used_bytes
+        assert engine.cluster.alive.tobytes() == alive_bytes
+        assert engine.stats == stats0
+
+    def test_scheduler_never_mutates_the_view(self, name, seed):
+        cluster = random_cluster(seed)
+        used = cluster.used_mb.tobytes()
+        alive = cluster.alive.tobytes()
+        sched = create_scheduler(name)
+        for item in random_items(seed, count=4):
+            sched.place(item, cluster)
+        assert cluster.used_mb.tobytes() == used
+        assert cluster.alive.tobytes() == alive
+
+
+@pytest.mark.parametrize("name", ALL_REGISTERED)
+class TestCapabilityContracts:
+    """Capability flags describe behavior truthfully — checked by flag,
+    never by name."""
+
+    def test_randomized_schedulers_are_pure_per_item(self, name):
+        # randomized == mapping depends on a seed, but repeated calls for
+        # the same (seed, item, cluster) must still agree (pure function).
+        caps = get_spec(name).capabilities
+        cluster = random_cluster(3)
+        item = random_items(3, count=1)[0]
+        a = create_scheduler(name).place(item, cluster)
+        b = create_scheduler(name).place(item, cluster)
+        assert a.placement == b.placement, (
+            f"{name}: place is not a pure function of (seed, item, cluster)"
+            + (" despite randomized flag" if caps.randomized else "")
+        )
+
+    def test_non_adaptive_schedulers_use_a_fixed_code(self, name):
+        caps = get_spec(name).capabilities
+        if caps.adaptive:
+            pytest.skip("adaptive schedulers choose (K, P) per item")
+        engine = PlacementEngine(
+            random_cluster(4, n_lo=10, n_hi=14),
+            create_scheduler(name),
+            auto_commit=False,
+        )
+        codes = {
+            (r.placement.k, r.placement.p)
+            for r in (engine.place(it) for it in random_items(4))
+            if r.ok
+        }
+        assert len(codes) <= 1, f"{name} varied (K,P) without adaptive flag"
+
+    def test_batch_scoring_schedulers_match_sequential_place(self, name):
+        caps = get_spec(name).capabilities
+        if not caps.batch_scoring:
+            pytest.skip("scheduler does not declare batch scoring")
+        sched = create_scheduler(name)
+        assert hasattr(sched, "place_batch"), (
+            f"{name} declares batch_scoring but has no place_batch"
+        )
+        items = random_items(5)
+        seq = PlacementEngine(random_cluster(5), create_scheduler(name))
+        want = [seq.place(it).placement for it in items]
+        bat = PlacementEngine(random_cluster(5), create_scheduler(name))
+        got = [r.placement for r in bat.place_many(items, ctx=BatchContext())]
+        assert got == want
+        np.testing.assert_array_equal(seq.cluster.used_mb, bat.cluster.used_mb)

@@ -13,6 +13,9 @@ from repro.ec import ECCodec, gf256
 from repro.kernels import ops, ref
 from repro.kernels.rs_bitmatmul import gf_bitmatmul
 
+# codec roundtrip property sweeps: full lane only (deselect via -m "not slow").
+pytestmark = pytest.mark.slow
+
 
 class TestGF256Host:
     def test_mul_identity_and_zero(self):

@@ -13,6 +13,9 @@ from repro.launch.mesh import make_mesh_compat
 from repro.models import forward, init_params
 from repro.models.sharding import activate_mesh
 
+# shard_map dispatch equivalence sweeps: full lane only (deselect via -m "not slow").
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def setup():

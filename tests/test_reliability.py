@@ -14,6 +14,7 @@ from repro.core.reliability import (
     batch_pr_avail_exact,
     meets_target,
     min_parity_for_target,
+    ParityFrontier,
     poisson_binomial_cdf,
     pr_avail,
     pr_failure,
@@ -162,6 +163,100 @@ class TestPrAvail:
         for copies in range(1, 5):
             avail = pr_avail([p] * (copies + 1), copies)
             assert avail == pytest.approx(1.0 - p ** (copies + 1))
+
+
+def _brute_force_min_parity(probs, target):
+    """Ground truth by 2^n enumeration: smallest P with Pr(X<=P) >= target,
+    -1 if even P = n-1 is insufficient (the frontier's convention)."""
+    n = len(probs)
+    for p in range(n):
+        if _brute_force_cdf(probs, p) >= target:
+            return p
+    return -1
+
+
+class TestParityFrontierProperties:
+    """Property tests for the frontier DP and its ``upto_many`` batch
+    variant against brute-force Poisson-binomial enumeration (n <= 8)."""
+
+    @given(
+        probs=st.lists(st.floats(0.0, 1.0), min_size=1, max_size=8),
+        target=st.floats(0.5, 0.9999999),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_upto_matches_brute_force_per_prefix(self, probs, target):
+        fr = ParityFrontier(np.array(probs), target).upto(len(probs))
+        for m in range(1, len(probs) + 1):
+            assert fr[m - 1] == _brute_force_min_parity(probs[:m], target)
+
+    @given(
+        probs=st.lists(st.floats(0.0, 1.0), min_size=1, max_size=8),
+        target=st.floats(0.5, 0.9999999),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_upto_many_matches_brute_force_per_window(self, probs, target):
+        out = ParityFrontier(np.array(probs), target).upto_many()
+        L = len(probs)
+        assert out.shape == (L, L)
+        for s in range(L):
+            for m in range(L):
+                window = probs[s : s + m + 1]
+                if s + m + 1 > L:
+                    assert out[s, m] == -1  # out of range
+                else:
+                    assert out[s, m] == _brute_force_min_parity(window, target)
+
+    @given(
+        probs=st.lists(st.floats(0.0, 1.0), min_size=1, max_size=8),
+        target=st.floats(0.5, 0.9999999),
+        n_starts=st.integers(1, 8),
+        nmax=st.integers(1, 8),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_upto_many_bounds_agree_with_full_matrix(self, probs, target, n_starts, nmax):
+        fr = ParityFrontier(np.array(probs), target)
+        full = fr.upto_many()
+        part = fr.upto_many(n_starts=n_starts, nmax=nmax)
+        s = min(n_starts, len(probs))
+        w = min(nmax, len(probs))
+        np.testing.assert_array_equal(part, full[:s, :w])
+
+    @pytest.mark.parametrize(
+        "probs",
+        [
+            [0.0, 0.0, 0.0],
+            [1.0, 1.0, 1.0],
+            [0.0, 1.0, 0.0, 1.0],
+            [0.3, 0.3, 0.3, 0.3],  # duplicates
+            [1.0],
+            [0.0],
+        ],
+    )
+    @pytest.mark.parametrize("target", [0.5, 0.99, 0.999999])
+    def test_degenerate_probs_match_brute_force(self, probs, target):
+        fr = ParityFrontier(np.array(probs), target)
+        out = fr.upto_many()
+        L = len(probs)
+        for s in range(L):
+            for m in range(L - s):
+                assert out[s, m] == _brute_force_min_parity(
+                    probs[s : s + m + 1], target
+                )
+        # Row 0 of upto_many is exactly upto's prefix frontier.
+        np.testing.assert_array_equal(out[0, :L], fr.upto(L))
+
+    def test_upto_many_row_zero_equals_upto_random(self):
+        rng = np.random.default_rng(17)
+        for _ in range(10):
+            n = int(rng.integers(2, 12))
+            probs = rng.uniform(0.0, 1.0, size=n)
+            t = float(rng.uniform(0.5, 0.99999))
+            fr = ParityFrontier(probs, t)
+            np.testing.assert_array_equal(fr.upto_many()[0], fr.upto(n))
+
+    def test_upto_many_empty_frontier(self):
+        out = ParityFrontier(np.array([]), 0.9).upto_many()
+        assert out.shape == (0, 0)
 
 
 class TestBatchJax:

@@ -9,6 +9,9 @@ from repro.configs import get_config
 from repro.models import forward, init_params
 from repro.serve import ServeConfig, ServingEngine
 
+# serving-engine e2e decode loops: full lane only (deselect via -m "not slow").
+pytestmark = pytest.mark.slow
+
 
 @pytest.mark.parametrize("arch", ["yi-6b", "rwkv6-1.6b", "recurrentgemma-9b", "qwen3-8b"])
 def test_generate_shapes_and_determinism(arch):

@@ -173,10 +173,11 @@ def _fig12_run(algo, rt, n_failures, **cfg_kwargs):
     return run_simulation(nodes, make_scheduler(algo), items, cfg)
 
 
+@pytest.mark.slow
 class TestLegacyEquivalence:
     """With ``repair_bw_mbps=inf`` the event-driven simulator must
     reproduce the pre-refactor sequential loop's results on the Fig. 12
-    configurations, bit-for-bit.
+    configurations, bit-for-bit.  (A 24-simulation sweep: full lane only.)
 
     Golden values were captured from the pre-refactor simulator at commit
     112a4fb.  ``drex_sc`` values were captured from the same sequential

@@ -17,6 +17,9 @@ from repro.serve import ServeConfig, ServingEngine
 from repro.storage import make_node_set, make_trace, run_simulation
 from repro.train import Trainer, TrainerConfig, init_train_state
 
+# full-pipeline e2e simulations: full lane only (deselect via -m "not slow").
+pytestmark = pytest.mark.slow
+
 
 SOTA = ["ec(3,2)", "ec(4,2)", "ec(6,3)", "daos"]
 

@@ -26,6 +26,9 @@ from repro.train import (
 )
 from repro.train.step import reshard_state
 
+# trainer-loop e2e steps: full lane only (deselect via -m "not slow").
+pytestmark = pytest.mark.slow
+
 
 class TestAdamW:
     def test_descends_quadratic(self):
