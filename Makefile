@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify test test-fast smoke-bench
+.PHONY: verify test test-fast smoke-bench bench-check
 
 ## Tier-1 gate: full test suite + smoke runs of the scheduling-overhead
 ## benchmark (batched place_many end to end) and the Fig. 12 failure
@@ -17,5 +17,18 @@ test:
 test-fast:
 	$(PYTHON) -m pytest -x -q -m "not slow"
 
+## Smoke sweeps write to a gitignored scratch directory so `make verify`
+## never clobbers the committed full-sweep JSON in results/benchmarks/.
 smoke-bench:
-	$(PYTHON) -m benchmarks.run --only table2,fig12 --smoke
+	$(PYTHON) -m benchmarks.run --only table2,fig12 --smoke \
+		--out results/benchmarks/ci-smoke
+
+## Benchmark-regression gate: run the CI-sized sweeps into the scratch
+## directory and fail if any gated decision-cost metric regressed >20%
+## against the committed smoke baselines (results/benchmarks/smoke/).
+## Regenerate baselines with:
+##   $(PYTHON) -m benchmarks.run --only table2,fig12 --smoke --out results/benchmarks/smoke
+bench-check:
+	$(PYTHON) -m benchmarks.run --only table2,fig12 --smoke \
+		--out results/benchmarks/ci-smoke \
+		--check-against results/benchmarks/smoke

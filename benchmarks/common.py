@@ -8,14 +8,46 @@ makes is reproduced structurally. Deterministic seeds everywhere.
 
 from __future__ import annotations
 
+import functools
 import json
 import pathlib
+import subprocess
 import time
 
 from repro.core import SCHEDULER_NAMES, create_scheduler
 from repro.storage import SimConfig, make_node_set, make_trace, run_simulation
 
 RESULTS = pathlib.Path("results/benchmarks")
+
+#: bump when the shape/meaning of emitted JSON changes; the regression
+#: gate (benchmarks/gate.py) refuses to compare across versions.
+SCHEMA_VERSION = 1
+
+#: process-wide run context set by benchmarks.run (smoke flag + output
+#: directory); emit() stamps it into every payload so the gate can check
+#: it compares like-for-like.
+_RUN_CONTEXT = {"smoke": False, "out_dir": RESULTS}
+
+
+def set_run_context(*, smoke: bool = False, out_dir=None) -> None:
+    _RUN_CONTEXT["smoke"] = bool(smoke)
+    _RUN_CONTEXT["out_dir"] = pathlib.Path(out_dir) if out_dir else RESULTS
+
+
+@functools.lru_cache(maxsize=1)
+def git_sha() -> str | None:
+    try:
+        return (
+            subprocess.check_output(
+                ["git", "rev-parse", "HEAD"],
+                cwd=pathlib.Path(__file__).resolve().parent,
+                stderr=subprocess.DEVNULL,
+            )
+            .decode()
+            .strip()
+        )
+    except Exception:  # not a checkout / no git binary
+        return None
 
 ALGOS = [n for n in SCHEDULER_NAMES if n != "random_spread"]
 DREX = ["drex_sc", "drex_lb"]
@@ -66,40 +98,69 @@ def matched_throughput(res_by_algo: dict, base: str, other: str) -> float:
     return thr(a) - thr(b)
 
 
-def sc_scalar_vs_vectorized(engine_factory, items) -> dict:
-    """Scalar-oracle vs vectorized-kernel scheduling overhead for D-Rex SC.
+def scalar_vs_vectorized(engine_factory, items, reps: int = 3) -> dict:
+    """Scalar-oracle vs vectorized-kernel scheduling overhead for any
+    kernel-backed scheduler (D-Rex SC, the greedy kernels).
 
     ``engine_factory()`` must return a fresh ``PlacementEngine`` running
-    a ``drex_sc`` scheduler on an identical cluster each call.  Times the
+    the scheduler on an identical cluster each call.  Times the
     sequential scalar oracle (``use_kernel=False``) against the batched
     vectorized ``place_many`` path (jit cache warmed on a throwaway
     engine first), asserts the decisions are identical, and returns the
-    per-item overhead columns.
+    per-item overhead columns.  Each path is timed ``reps`` times and
+    the **minimum** is reported — the standard load-spike-robust
+    estimator — because the speedup ratio feeds the benchmark-regression
+    gate and single-shot timings of sub-millisecond kernel calls are too
+    noisy to gate on.
     """
-    sca = engine_factory()
-    sca.scheduler.use_kernel = False
-    t0 = time.perf_counter()
-    want = [sca.place(it).placement for it in items]
-    t_scalar = time.perf_counter() - t0
+
+    def best_of(run) -> tuple[float, list]:
+        t_best, out = float("inf"), None
+        for _ in range(max(1, reps)):
+            t0 = time.perf_counter()
+            got = run()
+            t_best = min(t_best, time.perf_counter() - t0)
+            out = got
+        return t_best, out
+
+    def run_scalar():
+        eng = engine_factory()
+        eng.scheduler.use_kernel = False
+        return [eng.place(it).placement for it in items]
 
     engine_factory().place_many(items)  # warm the jit cache
-    vec = engine_factory()
-    t0 = time.perf_counter()
-    got = [r.placement for r in vec.place_many(items)]
-    t_vec = time.perf_counter() - t0
+    t_scalar, want = best_of(run_scalar)
+    t_vec, got = best_of(
+        lambda: [r.placement for r in engine_factory().place_many(items)]
+    )
     if want != got:
-        raise AssertionError("vectorized SC diverged from the scalar oracle")
+        raise AssertionError(
+            f"vectorized {engine_factory().scheduler.name} diverged from "
+            f"the scalar oracle"
+        )
     return {
         "n_items": len(items),
+        "reps": max(1, reps),
         "scalar_ms_per_item": t_scalar / len(items) * 1e3,
         "vectorized_ms_per_item": t_vec / len(items) * 1e3,
         "speedup_vs_scalar": t_scalar / t_vec if t_vec > 0 else float("inf"),
     }
 
 
+#: backward-compatible alias (fig6 predates the greedy kernels).
+sc_scalar_vs_vectorized = scalar_vs_vectorized
+
+
 def emit(name: str, payload: dict) -> None:
-    RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / f"{name}.json").write_text(json.dumps(payload, indent=2))
+    out_dir = _RUN_CONTEXT["out_dir"]
+    out_dir.mkdir(parents=True, exist_ok=True)
+    payload = dict(payload)
+    payload["meta"] = {
+        "schema_version": SCHEMA_VERSION,
+        "git_sha": git_sha(),
+        "smoke": _RUN_CONTEXT["smoke"],
+    }
+    (out_dir / f"{name}.json").write_text(json.dumps(payload, indent=2))
 
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:

@@ -1,0 +1,219 @@
+"""Benchmark-regression gate: compare fresh results against committed
+baselines and fail loudly when a decision-cost metric regresses.
+
+Three PRs of measured speedups accumulated in ``results/benchmarks/``
+with nothing stopping a future change from silently eroding them — CI
+ran the benchmarks but never compared the numbers.  This module is the
+comparison: ``benchmarks.run --check-against <baseline-dir>`` loads the
+freshly emitted JSON and the committed baseline for each benchmark,
+checks they are like-for-like (same ``meta.schema_version``, same
+``meta.smoke`` flag — a full-sweep baseline is never compared against a
+smoke run), and fails (nonzero exit) if any gated metric regresses more
+than ``DEFAULT_THRESHOLD``.
+
+Gated metrics are *ratios* (vectorized-kernel speedup over the scalar
+oracle on the same machine in the same process), so they transfer
+across machine speeds far better than absolute milliseconds — a CI
+runner half as fast slows both sides of the ratio.  Both sides are
+timed min-of-reps (``common.scalar_vs_vectorized``) so load spikes
+cannot fake a regression.  Committed smoke baselines live in
+``results/benchmarks/smoke/``; regenerate them with::
+
+    python -m benchmarks.run --only table2,fig12 --smoke \
+        --out results/benchmarks/smoke
+
+Ratios still carry a *systematic* machine-class component (a 4-vCPU
+runner gives XLA less parallel headroom than a many-core dev box), so
+baselines should be captured on — or recalibrated to — the machine
+class that runs the gate: the CI ``smoke-benchmarks`` artifact from any
+green run IS a valid baseline (same schema, ``smoke`` flag and
+parameters); download it and commit it under
+``results/benchmarks/smoke/`` to rebase the gate on runner hardware.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from .common import SCHEMA_VERSION
+
+__all__ = ["DEFAULT_THRESHOLD", "GATE_METRICS", "check_against"]
+
+#: relative regression tolerance: fail when a higher-is-better metric
+#: drops below (1 - threshold) x baseline.
+DEFAULT_THRESHOLD = 0.20
+
+#: benchmark name -> ((dotted metric path, direction), ...).  Only
+#: ratio-valued decision-cost metrics belong here (see module docstring);
+#: "higher" means higher is better.  GreedyLeastUsed's speedup is
+#: intentionally not gated: its scalar path is already dispatch-proof,
+#: so the ratio hovers near 1 and would gate on noise.
+GATE_METRICS: dict[str, tuple[tuple[str, str], ...]] = {
+    "table2": (
+        ("batched_sc.decision_cost.speedup_vs_scalar", "higher"),
+        ("batched_greedy.greedy_min_storage.decision_cost.speedup_vs_scalar",
+         "higher"),
+        ("batched_greedy.greedy_min_storage.committed.speedup_vs_scalar",
+         "higher"),
+    ),
+}
+
+
+#: keys that parameterize a benchmark section; compared along every
+#: gated metric's ancestor path so a SMOKE_KWARGS tweak (different
+#: batch/node count) is skipped instead of gated apples-to-oranges.
+_PARAM_KEYS = ("n_nodes", "batch", "n_items")
+
+
+def _lookup(payload: dict, dotted: str):
+    node = payload
+    for key in dotted.split("."):
+        if not isinstance(node, dict) or key not in node:
+            return None
+        node = node[key]
+    return node
+
+
+def _params_along(payload: dict, dotted: str) -> dict:
+    """Benchmark parameters found in the dicts along a metric's path."""
+    out = {}
+    node = payload
+    prefix = []
+    for key in dotted.split("."):
+        if not isinstance(node, dict):
+            break
+        for pk in _PARAM_KEYS:
+            v = node.get(pk)
+            if isinstance(v, (int, float)):
+                out[".".join(prefix + [pk])] = v
+        node = node.get(key)
+        prefix.append(key)
+    return out
+
+
+def _load(path: pathlib.Path):
+    """Parsed baseline/result dict, or None when absent or unusable —
+    a damaged file must skip its comparisons, never crash the run."""
+    try:
+        data = json.loads(path.read_text())
+    except (OSError, ValueError):
+        return None
+    return data if isinstance(data, dict) else None
+
+
+def check_against(
+    out_dir,
+    baseline_dir,
+    names,
+    threshold: float = DEFAULT_THRESHOLD,
+) -> tuple[list[str], list[str]]:
+    """Compare freshly emitted benchmark JSON against committed baselines.
+
+    Returns ``(failures, notes)``: ``failures`` are regressions that must
+    fail the run; ``notes`` are comparisons that were skipped and why
+    (missing baseline, schema or smoke-mode mismatch, metric absent).
+    A missing or mismatched baseline is never a failure — the gate only
+    compares like-for-like.
+    """
+    out_dir = pathlib.Path(out_dir)
+    baseline_dir = pathlib.Path(baseline_dir)
+    failures: list[str] = []
+    notes: list[str] = []
+    for name in names:
+        metrics = GATE_METRICS.get(name)
+        if not metrics:
+            continue
+        new = _load(out_dir / f"{name}.json")
+        base = _load(baseline_dir / f"{name}.json")
+        if new is None:
+            notes.append(f"{name}: no fresh results in {out_dir}; skipped")
+            continue
+        if base is None:
+            notes.append(f"{name}: no baseline in {baseline_dir}; skipped")
+            continue
+        new_meta = new.get("meta", {})
+        base_meta = base.get("meta", {})
+        if new_meta.get("schema_version") != base_meta.get("schema_version") or \
+                new_meta.get("schema_version") != SCHEMA_VERSION:
+            notes.append(
+                f"{name}: schema_version mismatch "
+                f"(baseline {base_meta.get('schema_version')}, "
+                f"fresh {new_meta.get('schema_version')}, "
+                f"gate {SCHEMA_VERSION}); skipped"
+            )
+            continue
+        if new_meta.get("smoke") != base_meta.get("smoke"):
+            notes.append(
+                f"{name}: smoke-mode mismatch "
+                f"(baseline smoke={base_meta.get('smoke')}, "
+                f"fresh smoke={new_meta.get('smoke')}); skipped"
+            )
+            continue
+        for dotted, direction in metrics:
+            old_v = _lookup(base, dotted)
+            new_v = _lookup(new, dotted)
+            if not isinstance(old_v, (int, float)) or not isinstance(
+                new_v, (int, float)
+            ):
+                notes.append(f"{name}.{dotted}: metric absent; skipped")
+                continue
+            old_p = _params_along(base, dotted)
+            new_p = _params_along(new, dotted)
+            if old_p != new_p:
+                notes.append(
+                    f"{name}.{dotted}: benchmark parameters differ "
+                    f"(baseline {old_p}, fresh {new_p}); skipped"
+                )
+                continue
+            if direction == "higher":
+                regressed = new_v < old_v * (1.0 - threshold)
+            else:
+                regressed = new_v > old_v * (1.0 + threshold)
+            if regressed:
+                failures.append(
+                    f"{name}.{dotted}: {new_v:.3f} vs baseline {old_v:.3f} "
+                    f"(worse than the {threshold:.0%} budget, "
+                    f"baseline sha {base_meta.get('git_sha') or 'unknown'})"
+                )
+    return failures, notes
+
+
+def report(failures: list[str], notes: list[str]) -> None:
+    """Print a gate result to stderr (shared by run.py and the CLI)."""
+    import sys
+
+    for note in notes:
+        print(f"[bench-gate] note: {note}", file=sys.stderr)
+    for reg in failures:
+        print(f"[bench-gate] REGRESSION {reg}", file=sys.stderr)
+    if not failures:
+        print("[bench-gate] all gated metrics within budget", file=sys.stderr)
+
+
+def main(argv=None) -> None:
+    """Standalone gate over already-emitted JSON (no benchmarks re-run):
+
+        python -m benchmarks.gate <results-dir> <baseline-dir> [name ...]
+
+    Used by CI to gate the verify job's smoke output without paying for
+    a second benchmark sweep; ``benchmarks.run --check-against`` is the
+    one-shot run-and-gate form.
+    """
+    import argparse
+
+    ap = argparse.ArgumentParser(description=main.__doc__)
+    ap.add_argument("results_dir")
+    ap.add_argument("baseline_dir")
+    ap.add_argument("names", nargs="*", default=None,
+                    help="benchmark names (default: all gated)")
+    args = ap.parse_args(argv)
+    names = args.names or sorted(GATE_METRICS)
+    failures, notes = check_against(args.results_dir, args.baseline_dir, names)
+    report(failures, notes)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,19 +1,31 @@
 """Benchmark harness entry point — one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV per the harness contract, and
-writes per-figure JSON into results/benchmarks/ for EXPERIMENTS.md.
+writes per-figure JSON (stamped with ``meta``: schema version, git SHA,
+smoke flag) into results/benchmarks/ for EXPERIMENTS.md.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig5,fig12] [--smoke]
+        [--out DIR] [--check-against BASELINE_DIR]
 
-``--smoke`` shrinks the parameterizable benchmarks (currently table2) to
-CI-sized sweeps; used by ``make verify`` / the GitHub Actions workflow.
+``--smoke`` shrinks the parameterizable benchmarks to CI-sized sweeps;
+used by ``make verify`` / the GitHub Actions workflow.  All RNGs are
+seeded explicitly at startup so repeated runs are comparable.
+
+``--check-against`` is the benchmark-regression gate (``make
+bench-check`` / the ``bench-gate`` CI job): after the run, the freshly
+emitted JSON is compared like-for-like against the committed baselines
+in BASELINE_DIR (see benchmarks/gate.py) and the process exits nonzero
+if any gated decision-cost metric regressed beyond the budget.
 """
 
 from __future__ import annotations
 
 import argparse
+import random
 import sys
 import time
+
+import numpy as np
 
 from . import (
     fig1_encode_breakdown,
@@ -26,8 +38,10 @@ from . import (
     fig11_throughput_datasets,
     fig12_failures,
     fig13_e2e_checkpoint,
+    gate,
     table2_overhead,
 )
+from . import common
 
 BENCHES = {
     "fig1": fig1_encode_breakdown.run,
@@ -46,7 +60,12 @@ BENCHES = {
 
 #: reduced parameters per benchmark under --smoke (others run unchanged).
 SMOKE_KWARGS = {
-    "table2": dict(sizes=(10, 50), reps=1, batch=100),
+    # greedy_batch stays >= 32 so the gated speedup ratios divide two
+    # multi-millisecond totals (min-of-reps timed) instead of dispatch
+    # jitter; see benchmarks/gate.py.
+    "table2": dict(
+        sizes=(10, 50), reps=1, batch=100, greedy_nodes=100, greedy_batch=32
+    ),
     # CI-sized failure/repair sweep: exercises the event-driven simulator's
     # failure, repair-bandwidth and drop paths on every PR.
     "fig12": dict(
@@ -63,7 +82,25 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated subset")
     ap.add_argument("--smoke", action="store_true", help="CI-sized sweeps")
+    ap.add_argument(
+        "--out",
+        default=None,
+        help="directory for emitted JSON (default results/benchmarks)",
+    )
+    ap.add_argument(
+        "--check-against",
+        default=None,
+        metavar="BASELINE_DIR",
+        help="after running, fail (exit 1) if any gated decision-cost "
+        "metric regressed beyond the budget vs the baselines in this dir",
+    )
     args = ap.parse_args()
+    # Explicit global seeding: every benchmark already uses per-call
+    # default_rng(seed), but any stray library draw must be repeatable
+    # too or the regression gate would not compare like-for-like.
+    random.seed(0)
+    np.random.seed(0)
+    common.set_run_context(smoke=args.smoke, out_dir=args.out)
     names = list(BENCHES) if not args.only else args.only.split(",")
     print("name,us_per_call,derived")
     failures = []
@@ -77,9 +114,18 @@ def main() -> None:
             failures.append((name, repr(e)))
             print(f"{name},0.0,ERROR:{type(e).__name__}", flush=True)
         print(f"{name}_wall,{(time.perf_counter()-t0)*1e6:.0f},", flush=True)
+    gate_failed = False
+    if args.check_against:
+        out_dir = args.out or common.RESULTS
+        regressions, notes = gate.check_against(
+            out_dir, args.check_against, names
+        )
+        gate.report(regressions, notes)
+        gate_failed = bool(regressions)
     if failures:
         for n, e in failures:
             print(f"[bench] FAILED {n}: {e}", file=sys.stderr)
+    if failures or gate_failed:
         raise SystemExit(1)
 
 

@@ -14,6 +14,11 @@ kernel (repro.core.sc_kernel): the scalar numpy oracle
 non-committing (one vmapped call over the whole queue) and committing
 (per-item kernel calls, since every commit invalidates the remaining
 scores).  Decisions are verified identical before speedups are reported.
+
+The ``batched_greedy`` section applies the same protocol to the greedy
+kernels (repro.core.greedy_kernel) at ``greedy_nodes`` nodes — the
+GreedyMinStorage decision-cost column is the headline number the
+benchmark-regression gate (benchmarks/gate.py) protects.
 """
 
 import time
@@ -49,7 +54,13 @@ def _cluster(n: int) -> ClusterView:
 ADAPTIVE = ("greedy_min_storage", "greedy_least_used", "drex_lb", "drex_sc")
 
 
-def run(sizes=(10, 50, 100, 500), reps: int = 3, batch: int = 128) -> list[str]:
+def run(
+    sizes=(10, 50, 100, 500),
+    reps: int = 3,
+    batch: int = 128,
+    greedy_nodes: int = 500,
+    greedy_batch: int = 32,
+) -> list[str]:
     lines = []
     table = {}
     for algo in ADAPTIVE:
@@ -104,6 +115,11 @@ def run(sizes=(10, 50, 100, 500), reps: int = 3, batch: int = 128) -> list[str]:
 
     # -- D-Rex SC: scalar numpy oracle vs jitted/vmapped kernel --------------
     table["batched_sc"] = _sc_scalar_vs_vectorized(n_nodes, batch, lines)
+
+    # -- greedy kernels: scalar oracles vs jitted/vmapped kernels ------------
+    table["batched_greedy"] = _greedy_scalar_vs_vectorized(
+        greedy_nodes, greedy_batch, lines
+    )
     emit("table2", table)
     return lines
 
@@ -116,12 +132,12 @@ def _sc_scalar_vs_vectorized(n_nodes: int, batch: int, lines: list[str]) -> dict
     commit (per-item kernel calls).  Both are verified decision-
     identical to the sequential scalar oracle before timing counts.
     """
-    from .common import sc_scalar_vs_vectorized
+    from .common import scalar_vs_vectorized
 
     items = [DataItem(i, 117.0, float(i), 365.0, 0.999) for i in range(batch)]
     out = {"n_nodes": n_nodes, "batch": batch}
     for label, auto_commit in (("decision_cost", False), ("committed", True)):
-        cols = sc_scalar_vs_vectorized(
+        cols = scalar_vs_vectorized(
             lambda: PlacementEngine(
                 _cluster(n_nodes), create_scheduler("drex_sc"), auto_commit=auto_commit
             ),
@@ -135,4 +151,40 @@ def _sc_scalar_vs_vectorized(n_nodes: int, batch: int, lines: list[str]) -> dict
                 f"scalar_vs_vectorized={cols['speedup_vs_scalar']:.2f}x",
             )
         )
+    return out
+
+
+def _greedy_scalar_vs_vectorized(n_nodes: int, batch: int, lines: list[str]) -> dict:
+    """Scalar oracles vs the jitted greedy kernels (repro.core.greedy_kernel).
+
+    Same protocol as the SC section: non-committing engines score the
+    whole queue against one snapshot (decision cost — the Table-2
+    protocol and the metric the benchmark-regression gate watches);
+    committing engines re-score after every commit.  Decisions are
+    verified identical to the sequential scalar oracle before any
+    speedup is reported.
+    """
+    from .common import scalar_vs_vectorized
+
+    items = [DataItem(i, 117.0, float(i), 365.0, 0.999) for i in range(batch)]
+    out = {}
+    for algo in ("greedy_min_storage", "greedy_least_used"):
+        cols_algo = {"n_nodes": n_nodes, "batch": batch}
+        for label, auto_commit in (("decision_cost", False), ("committed", True)):
+            cols = scalar_vs_vectorized(
+                lambda: PlacementEngine(
+                    _cluster(n_nodes), create_scheduler(algo),
+                    auto_commit=auto_commit,
+                ),
+                items,
+            )
+            cols_algo[label] = cols
+            lines.append(
+                csv_row(
+                    f"table2_{algo}_{label}_vectorized",
+                    cols["vectorized_ms_per_item"] * 1e3,
+                    f"scalar_vs_vectorized={cols['speedup_vs_scalar']:.2f}x",
+                )
+            )
+        out[algo] = cols_algo
     return out

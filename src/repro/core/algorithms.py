@@ -25,7 +25,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from . import sc_kernel
+from . import greedy_kernel, sc_kernel
 from .registry import (
     create_scheduler,
     get_spec,
@@ -33,7 +33,7 @@ from .registry import (
     register_scheduler_family,
     SchedulerCapabilities,
 )
-from .reliability import min_parity_for_target, ParityFrontier
+from .reliability import _AUTO_EXACT_LIMIT, min_parity_for_target, ParityFrontier
 from .types import ClusterView, DataItem, Decision, ECTimeModel, Placement
 
 __all__ = [
@@ -119,25 +119,141 @@ class Scheduler:
         return -1 if mp is None else mp
 
 
+def _kernel_dispatch(
+    scheduler, kernel_ok: bool, cluster: ClusterView, batch: int
+) -> bool:
+    """The one kernel/scalar dispatch rule for kernel-backed schedulers:
+    a single item needs at least ``KERNEL_MIN_NODES`` live nodes for the
+    kernel to beat numpy dispatch; batches of >= 4 items amortize
+    dispatch and need only ``KERNEL_MIN_NODES_BATCH`` (0 for most
+    schedulers — GreedyLeastUsed's scalar scan is so cheap its kernel
+    only wins batched on large clusters).  Setting both to 0 forces the
+    kernel everywhere (the equivalence tests do).  Boundary pinned by
+    tests/test_kernel_dispatch_boundary.py."""
+    if not (scheduler.use_kernel and kernel_ok):
+        return False
+    live = int(np.count_nonzero(cluster.alive))
+    if batch >= 4:
+        return live >= scheduler.KERNEL_MIN_NODES_BATCH
+    return live >= scheduler.KERNEL_MIN_NODES
+
+
+class _GreedyKernelMixin:
+    """Kernel/scalar dispatch shared by the greedy schedulers, whose
+    vectorized paths live in :mod:`repro.core.greedy_kernel`.  Concrete
+    classes provide the scalar oracle (``_place_scalar``), the batched
+    kernel path (``_place_kernel``) and the ``KERNEL_MIN_NODES``
+    crossover."""
+
+    #: set to False to force the scalar numpy oracle even when jax is
+    #: present.
+    use_kernel = True
+    #: live-node crossover for batched (>= 4 item) dispatch; 0 = batches
+    #: always use the kernel (see :func:`_kernel_dispatch`).
+    KERNEL_MIN_NODES_BATCH = 0
+
+    def _kernel_wins(self, cluster: ClusterView, batch: int) -> bool:
+        return _kernel_dispatch(
+            self, greedy_kernel.kernel_available(), cluster, batch
+        )
+
+    def place(self, item: DataItem, cluster: ClusterView, ctx=None) -> Decision:
+        self.observe_item(item)
+        if self._kernel_wins(cluster, 1):
+            return self._place_kernel([item], cluster, ctx)[0]
+        return self._place_scalar(item, cluster, ctx)
+
+    def place_batch(
+        self, items: Sequence[DataItem], cluster: ClusterView, ctx=None
+    ) -> list[Decision]:
+        """Score ``items`` against the *current* cluster snapshot in one
+        vmapped kernel call (pure; consumed by the engine's batched
+        ``place_many``, which re-scores items invalidated by a commit)."""
+        if self._kernel_wins(cluster, len(items)):
+            return self._place_kernel(list(items), cluster, ctx)
+        return [self._place_scalar(it, cluster, ctx) for it in items]
+
+    def place_scalar(
+        self, item: DataItem, cluster: ClusterView, ctx=None
+    ) -> Decision:
+        """Reference numpy oracle (kept for equivalence tests/benchmarks)."""
+        self.observe_item(item)
+        return self._place_scalar(item, cluster, ctx)
+
+
 # ---------------------------------------------------------------------------
 # §4.1 GreedyMinStorage
 # ---------------------------------------------------------------------------
 
 
 @register_scheduler(
-    "greedy_min_storage", adaptive=True, supports_parity_growth=True
+    "greedy_min_storage",
+    adaptive=True,
+    supports_parity_growth=True,
+    batch_scoring=True,
 )
-class GreedyMinStorage(Scheduler):
+class GreedyMinStorage(_GreedyKernelMixin, Scheduler):
     """Minimize per-item storage footprint ``(size/K) * N`` s.t. reliability
     (Eq. 4); mapping favors the fastest (write-bandwidth) nodes *among
     those with room for the chunk* — once the fast nodes saturate the
     selection slides to slower ones instead of failing (the paper's §5.4
-    observation that GreedyMinStorage keeps utilizing all nodes)."""
+    observation that GreedyMinStorage keeps utilizing all nodes).
+
+    Two implementations of the same decision function: the scalar numpy
+    oracle (:meth:`place_scalar` — the Python fixed-point loop over K per
+    candidate N) and the jitted jax kernel
+    (:mod:`repro.core.greedy_kernel`), which evaluates the fixed point in
+    closed form for every N at once wherever the bw-sorted prefix fits
+    the chunk, finishing capacity-tight rows with the same
+    :meth:`_fixed_point_row` the oracle runs.  ``place`` uses the kernel
+    when jax is importable and the cluster clears ``KERNEL_MIN_NODES``
+    (batches of >= 4 items always do); ``place_batch`` vmaps it over many
+    items sharing a snapshot.  Decisions are bit-for-bit equivalent and
+    pinned by tests/test_greedy_vectorized.py.
+    """
 
     name = "greedy_min_storage"
+    #: below this many live nodes a single-item kernel call is dispatch-
+    #: bound and the scalar oracle wins; batches of >= 4 items amortize
+    #: dispatch and use the kernel regardless (measured crossover,
+    #: benchmarks/table2).  Set to 0 to force the kernel (tests do).
+    KERNEL_MIN_NODES = 24
 
-    def place(self, item: DataItem, cluster: ClusterView, ctx=None) -> Decision:
-        self.observe_item(item)
+    def _fixed_point_row(
+        self, n, by_bw, free, fail_all, size, target, ctx
+    ) -> Optional[Placement]:
+        # Fixed point over K for one N: the chunk size determines which
+        # nodes qualify (free >= chunk), which determines the mapping,
+        # which determines the min parity, which determines K. K only
+        # ever decreases, so this terminates in <= N steps (typically
+        # 1-2).  Shared verbatim by the scalar oracle's N-loop and the
+        # kernel's slow-row fallback.
+        k = n - 1
+        while k >= 1:
+            chunk = size / k
+            fitting = by_bw[free[by_bw] >= chunk]
+            if len(fitting) < n:
+                return None
+            mapping = fitting[:n]
+            mp = self._min_parity(fail_all[mapping], target, ctx)
+            if mp < 0:
+                return None
+            p_star = max(1, mp)  # the repository always keeps parity
+            k_new = n - p_star
+            if k_new < 1:
+                return None
+            if k_new >= k:
+                return Placement(
+                    k=k, p=n - k, node_ids=tuple(int(x) for x in mapping)
+                )
+            k = k_new
+        return None
+
+    # -- scalar oracle ------------------------------------------------------
+
+    def _place_scalar(
+        self, item: DataItem, cluster: ClusterView, ctx=None
+    ) -> Decision:
         by_bw = self._live_sorted(cluster, cluster.write_bw)
         L = len(by_bw)
         if L < 2:
@@ -150,33 +266,10 @@ class GreedyMinStorage(Scheduler):
         considered = 0
         for n in range(2, L + 1):
             considered += 1
-            # Fixed point over K: the chunk size determines which nodes
-            # qualify (free >= chunk), which determines the mapping, which
-            # determines the min parity, which determines K. K only ever
-            # decreases, so this terminates in <= N steps (typically 1-2).
-            k = n - 1
-            placement = None
-            while k >= 1:
-                chunk = item.size_mb / k
-                fitting = by_bw[free[by_bw] >= chunk]
-                if len(fitting) < n:
-                    break
-                mapping = fitting[:n]
-                mp = self._min_parity(
-                    fail_all[mapping], item.reliability_target, ctx
-                )
-                if mp < 0:
-                    break
-                p_star = max(1, mp)  # the repository always keeps parity
-                k_new = n - p_star
-                if k_new < 1:
-                    break
-                if k_new >= k:
-                    placement = Placement(
-                        k=k, p=n - k, node_ids=tuple(int(x) for x in mapping)
-                    )
-                    break
-                k = k_new
+            placement = self._fixed_point_row(
+                n, by_bw, free, fail_all, item.size_mb,
+                item.reliability_target, ctx,
+            )
             if placement is None:
                 continue
             cost = (item.size_mb / placement.k) * n
@@ -187,6 +280,94 @@ class GreedyMinStorage(Scheduler):
             return Decision(None, considered, "no (N,K) satisfies reliability+capacity")
         return Decision(best, considered, "")
 
+    # -- vectorized path ----------------------------------------------------
+
+    def _place_kernel(
+        self, items: list[DataItem], cluster: ClusterView, ctx
+    ) -> list[Decision]:
+        by_bw = self._live_sorted(cluster, cluster.write_bw)
+        L = len(by_bw)
+        if L < 2:
+            return [Decision(None, 0, "fewer than 2 live nodes") for _ in items]
+        free = cluster.free_mb
+        free_bw = free[by_bw]
+        B = len(items)
+        fail_rows: list[np.ndarray] = []
+        probs_mat = np.empty((B, L), dtype=np.float64)
+        for row, item in enumerate(items):
+            fa = self._fail_probs(cluster, item, ctx)
+            fail_rows.append(fa)
+            probs_mat[row] = fa[by_bw]
+        # Host-side RNA frontier rows for mappings beyond the exact-DP
+        # limit (the oracle's min_parity auto-method switch); items
+        # sharing (fail probs, target) pay for a row once per batch.
+        rna_rows = np.full((B, L + 1), -1, dtype=np.int64)
+        if L > _AUTO_EXACT_LIMIT:
+            memo: dict[tuple[bytes, float], np.ndarray] = {}
+            for row, item in enumerate(items):
+                if ctx is not None:
+                    rna_rows[row] = ctx.rna_frontier(
+                        probs_mat[row], item.reliability_target, L
+                    )
+                    continue
+                key = (probs_mat[row].tobytes(), item.reliability_target)
+                got = memo.get(key)
+                if got is None:
+                    got = greedy_kernel.rna_frontier_row(
+                        probs_mat[row], item.reliability_target, L
+                    )
+                    memo[key] = got
+                rna_rows[row] = got
+        valid, slow, ks, ps, cost = greedy_kernel.min_storage_batch(
+            probs_mat,
+            np.array([it.size_mb for it in items], dtype=np.float64),
+            np.array([it.reliability_target for it in items], dtype=np.float64),
+            rna_rows,
+            free_bw,
+        )
+        decisions = []
+        considered = L - 1  # the N-loop always runs 2..L
+        for row, item in enumerate(items):
+            c = cost[row]
+            slow_pl: dict[int, Placement] = {}
+            if slow[row].any():
+                # Capacity filter engaged: finish these N with the same
+                # fixed point the scalar oracle runs, then merge.
+                c = c.copy()
+                for i in np.nonzero(slow[row])[0]:
+                    n = int(i) + 1
+                    pl = self._fixed_point_row(
+                        n, by_bw, free, fail_rows[row], item.size_mb,
+                        item.reliability_target, ctx,
+                    )
+                    if pl is not None:
+                        slow_pl[n] = pl
+                        c[i] = (item.size_mb / pl.k) * n
+            best_i = int(np.argmin(c))
+            if not np.isfinite(c[best_i]):
+                decisions.append(
+                    Decision(
+                        None, considered, "no (N,K) satisfies reliability+capacity"
+                    )
+                )
+                continue
+            n = best_i + 1
+            if n in slow_pl:
+                decisions.append(Decision(slow_pl[n], considered, ""))
+            else:
+                decisions.append(
+                    Decision(
+                        Placement(
+                            k=int(ks[row, best_i]),
+                            p=int(ps[row, best_i]),
+                            node_ids=tuple(int(x) for x in by_bw[:n]),
+                        ),
+                        considered,
+                        "",
+                    )
+                )
+        return decisions
+
 
 # ---------------------------------------------------------------------------
 # §4.2 GreedyLeastUsed
@@ -194,19 +375,45 @@ class GreedyMinStorage(Scheduler):
 
 
 @register_scheduler(
-    "greedy_least_used", adaptive=True, supports_parity_growth=True
+    "greedy_least_used",
+    adaptive=True,
+    supports_parity_growth=True,
+    batch_scoring=True,
 )
-class GreedyLeastUsed(Scheduler):
+class GreedyLeastUsed(_GreedyKernelMixin, Scheduler):
     """Minimize ``K+P`` s.t. reliability (Eq. 5); nodes with the highest
     free space get the chunks (then minimal parity among feasible).
     ``K >= 2`` as in Alg. 1 — the paper's erasure-coding schedulers do not
     degenerate to replication (only DAOS's explicit replication configs do).
+
+    The scalar numpy oracle (:meth:`place_scalar`) scans N upward with a
+    lazily-extended :class:`ParityFrontier`; the jitted jax kernel
+    (:mod:`repro.core.greedy_kernel`) evaluates the whole first-feasible-N
+    scan as one masked DP, vmapped across items in :meth:`place_batch`.
+    Equivalence is pinned by tests/test_greedy_vectorized.py.
     """
 
     name = "greedy_least_used"
+    #: the scalar scan stops at the first feasible N (typically < 10), so
+    #: a single-item kernel call is dispatch-bound at any realistic
+    #: cluster size (measured: the scalar oracle wins even at 500 nodes);
+    #: only batches of >= 4 items amortize dispatch into a win.  The
+    #: constant still defines the dispatch boundary for forced-kernel
+    #: tests (set it to 0 to force the kernel everywhere).
+    KERNEL_MIN_NODES = 4096
+    #: batched calls beat the scalar loop only on large clusters (the
+    #: capped DP wins ~1.8x at 500 nodes but loses ~1.4x at 100, where
+    #: the whole queue costs under a millisecond either way).
+    KERNEL_MIN_NODES_BATCH = 192
+    #: prefix length the kernel scans: the first feasible N within the
+    #: cap is globally first-feasible, and items with none fall back to
+    #: the scalar oracle (bit-identical, just recomputed) — keeping the
+    #: vmapped DP O(batch * SCAN_CAP^2) instead of O(batch * L^2).
+    SCAN_CAP = 32
 
-    def place(self, item: DataItem, cluster: ClusterView, ctx=None) -> Decision:
-        self.observe_item(item)
+    def _place_scalar(
+        self, item: DataItem, cluster: ClusterView, ctx=None
+    ) -> Decision:
         by_free = self._live_sorted(cluster, cluster.free_mb)
         L = len(by_free)
         if L < 2:
@@ -236,6 +443,49 @@ class GreedyLeastUsed(Scheduler):
                 "",
             )
         return Decision(None, considered, "no N satisfies reliability+capacity")
+
+    def _place_kernel(
+        self, items: list[DataItem], cluster: ClusterView, ctx
+    ) -> list[Decision]:
+        by_free = self._live_sorted(cluster, cluster.free_mb)
+        L = len(by_free)
+        if L < 2:
+            return [Decision(None, 0, "fewer than 2 live nodes") for _ in items]
+        probs_mat = np.empty((len(items), L), dtype=np.float64)
+        for row, item in enumerate(items):
+            probs_mat[row] = self._fail_probs(cluster, item, ctx)[by_free]
+        cap = min(L, self.SCAN_CAP)
+        ok, ns, ks, ps = greedy_kernel.least_used_batch(
+            probs_mat[:, :cap],
+            np.array([it.size_mb for it in items], dtype=np.float64),
+            np.array([it.reliability_target for it in items], dtype=np.float64),
+            cluster.free_mb[by_free][:cap],
+        )
+        decisions = []
+        for row, item in enumerate(items):
+            if not ok[row]:
+                if cap < L:
+                    # No feasible N within the scanned prefix: finish with
+                    # the scalar oracle (rare; bit-identical decision).
+                    decisions.append(self._place_scalar(item, cluster, ctx))
+                else:
+                    decisions.append(
+                        Decision(None, L - 1, "no N satisfies reliability+capacity")
+                    )
+                continue
+            n = int(ns[row])
+            decisions.append(
+                Decision(
+                    Placement(
+                        k=int(ks[row]),
+                        p=int(ps[row]),
+                        node_ids=tuple(int(x) for x in by_free[:n]),
+                    ),
+                    n - 1,  # the scalar scan increments considered per N
+                    "",
+                )
+            )
+        return decisions
 
 
 # ---------------------------------------------------------------------------
@@ -355,23 +605,24 @@ class DRexSC(Scheduler):
 
     name = "drex_sc"
     MAX_MAPPINGS = 2**10
-    #: force the scalar numpy oracle even when jax is present.
+    #: set to False to force the scalar numpy oracle even when jax is
+    #: present.
     use_kernel = True
     #: below this many live nodes a single-item kernel call is dispatch-
     #: bound and the numpy oracle wins; batches amortize dispatch and use
     #: the kernel regardless (measured crossover, benchmarks/table2).
     #: Set to 0 to force the kernel everywhere (equivalence tests do).
     KERNEL_MIN_NODES = 16
+    #: batches of >= 4 items always use the kernel (see _kernel_dispatch).
+    KERNEL_MIN_NODES_BATCH = 0
 
     def __init__(self, time_model: ECTimeModel | None = None):
         self.time_model = time_model or ECTimeModel()
 
     def _kernel_wins(self, cluster: ClusterView, batch: int) -> bool:
-        if not (self.use_kernel and sc_kernel.kernel_available()):
-            return False
-        if batch >= 4:
-            return True
-        return int(np.count_nonzero(cluster.alive)) >= self.KERNEL_MIN_NODES
+        return _kernel_dispatch(
+            self, sc_kernel.kernel_available(), cluster, batch
+        )
 
     def place(self, item: DataItem, cluster: ClusterView, ctx=None) -> Decision:
         self.observe_item(item)

@@ -36,6 +36,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from . import greedy_kernel
 from .registry import create_scheduler, scheduler_capabilities
 from .reliability import min_parity_for_target, ParityFrontier
 from .repair import RepairPlan, RepairPlanner
@@ -83,6 +84,7 @@ class BatchContext:
         self._fail_probs: dict[tuple[float, bytes], np.ndarray] = {}
         self._frontiers: dict[tuple[bytes, float], ParityFrontier] = {}
         self._min_parity: dict[tuple[bytes, float], int] = {}
+        self._rna_rows: dict[tuple[bytes, float, int], np.ndarray] = {}
         self.hits = 0
         self.misses = 0
 
@@ -120,6 +122,26 @@ class BatchContext:
         else:
             self.hits += 1
         return fr
+
+    def rna_frontier(
+        self, sorted_fail_probs: np.ndarray, target: float, L: int
+    ) -> np.ndarray:
+        """Shared RNA min-parity frontier row for one sorted node sequence
+        (the approximation-regime half of the GreedyMinStorage kernel;
+        see :func:`repro.core.greedy_kernel.rna_frontier_row`).  The
+        write-bandwidth sort order is insensitive to occupancy, so this
+        row survives the commits of a batch and amortizes across the
+        per-commit rescoring groups of ``place_many``."""
+        key = (np.ascontiguousarray(sorted_fail_probs).tobytes(), float(target), int(L))
+        row = self._rna_rows.get(key)
+        if row is None:
+            self.misses += 1
+            row = greedy_kernel.rna_frontier_row(sorted_fail_probs, target, L)
+            self._bound(self._rna_rows)
+            self._rna_rows[key] = row
+        else:
+            self.hits += 1
+        return row
 
     def min_parity(self, fail_probs: np.ndarray, target: float) -> int:
         """Min parity for an arbitrary mapping; -1 if infeasible."""

@@ -61,6 +61,9 @@ class SchedulerCapabilities:
     #: decisions identical to sequential ``place`` while the cluster is
     #: unchanged.  Consumed by ``PlacementEngine.place_many`` (which
     #: re-scores items invalidated by a commit); never match on names.
+    #: Declared by D-Rex SC (core/sc_kernel) and both greedy baselines
+    #: (core/greedy_kernel); the scalar paths survive as the equivalence
+    #: oracles (``place_scalar``).
     batch_scoring: bool = False
 
 

@@ -33,6 +33,7 @@ __all__ = [
     "max_parity_needed",
     "min_parity_for_target",
     "parity_frontier",
+    "rna_parity_frontier",
     "ParityFrontier",
 ]
 
@@ -79,6 +80,17 @@ def _exact_cdf(p: np.ndarray, k: int) -> float:
     return float(min(1.0, dp.sum()))
 
 
+def _rna_cdf_from_moments(mu: float, sigma: float, gamma: float, k: int) -> float:
+    """Hong (2013) eq. 10 probe with the distribution moments precomputed
+    — the one place the RNA formula lives (callers: :func:`_rna_cdf` per
+    mapping, :func:`rna_parity_frontier` per prefix)."""
+    x = (k + 0.5 - mu) / sigma
+    phi = math.exp(-0.5 * x * x) / _SQRT2PI
+    big_phi = 0.5 * (1.0 + math.erf(x / math.sqrt(2.0)))
+    val = big_phi + gamma * (1.0 - x * x) * phi / 6.0
+    return float(min(1.0, max(0.0, val)))
+
+
 def _rna_cdf(p: np.ndarray, k: int) -> float:
     """Refined normal approximation (Hong 2013, eq. 10) to Pr(X <= k).
 
@@ -94,11 +106,7 @@ def _rna_cdf(p: np.ndarray, k: int) -> float:
         return 1.0 if k >= round(mu) else 0.0
     sigma = math.sqrt(var)
     gamma = float((p * (1.0 - p) * (1.0 - 2.0 * p)).sum()) / (sigma**3)
-    x = (k + 0.5 - mu) / sigma
-    phi = math.exp(-0.5 * x * x) / _SQRT2PI
-    big_phi = 0.5 * (1.0 + math.erf(x / math.sqrt(2.0)))
-    val = big_phi + gamma * (1.0 - x * x) * phi / 6.0
-    return float(min(1.0, max(0.0, val)))
+    return _rna_cdf_from_moments(mu, sigma, gamma, k)
 
 
 def poisson_binomial_cdf(
@@ -290,6 +298,47 @@ def min_parity_for_target(
         if _rna_cdf(p, parity) >= target:
             return parity
     return None
+
+
+def rna_parity_frontier(
+    sorted_fail_probs, target: float, n_lo: int, n_hi: int
+) -> np.ndarray:
+    """Min parity per prefix length under the RNA regime, moments hoisted.
+
+    ``out[i]`` is the smallest parity whose refined-normal-approximation
+    CDF meets ``target`` for the length-``n_lo + i`` prefix of
+    ``sorted_fail_probs`` (``-1`` infeasible) — bit-for-bit identical to
+    calling :func:`min_parity_for_target` per prefix in its ``auto``
+    regime above ``_AUTO_EXACT_LIMIT`` (same elementwise products, same
+    pairwise prefix summations, the shared :func:`_rna_cdf_from_moments`
+    probe in the same scan order), but the O(n) moment sums are computed
+    once per prefix instead of once per parity probe.  This is the
+    host-side half of the GreedyMinStorage kernel
+    (:mod:`repro.core.greedy_kernel`): XLA transcendentals differ from
+    libm in ulps, so the approximation regime stays on the CPU.
+    """
+    p = np.asarray(sorted_fail_probs, dtype=np.float64)
+    w = p * (1.0 - p)
+    g = w * (1.0 - 2.0 * p)
+    n_lo = max(1, n_lo)
+    out = np.full(max(0, n_hi - n_lo + 1), -1, dtype=np.int64)
+    for i, n in enumerate(range(n_lo, n_hi + 1)):
+        mu = float(p[:n].sum())
+        var = float(w[:n].sum())
+        if var <= 0.0:
+            # All-deterministic trials: X == mu exactly (cf. _rna_cdf).
+            for k in range(n):
+                if (1.0 if k >= round(mu) else 0.0) >= target:
+                    out[i] = k
+                    break
+            continue
+        sigma = math.sqrt(var)
+        gamma = float(g[:n].sum()) / (sigma**3)
+        for k in range(n):
+            if _rna_cdf_from_moments(mu, sigma, gamma, k) >= target:
+                out[i] = k
+                break
+    return out
 
 
 def max_parity_needed(target: float, worst_fail_prob: float) -> int:

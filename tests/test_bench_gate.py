@@ -1,0 +1,194 @@
+"""Unit tests for the benchmark-regression gate (benchmarks/gate.py).
+
+The gate compares freshly emitted benchmark JSON against committed
+baselines and must: fail when a gated decision-cost metric regresses
+beyond the budget (the issue's 'demonstrably fails when a committed
+metric is artificially inflated >20%' criterion), pass within the
+budget, and skip — never fail — when the comparison would not be
+like-for-like (schema or smoke-mode mismatch, missing files/metrics).
+Synthetic JSON only; no benchmarks are executed.
+"""
+
+import json
+
+import pytest
+
+from benchmarks import gate
+from benchmarks.common import SCHEMA_VERSION
+
+METRIC = "batched_greedy.greedy_min_storage.decision_cost.speedup_vs_scalar"
+
+
+def payload(speedup: float, *, smoke=True, schema=SCHEMA_VERSION, sha="abc123"):
+    return {
+        "batched_sc": {"decision_cost": {"speedup_vs_scalar": 6.0}},
+        "batched_greedy": {
+            "greedy_min_storage": {
+                "decision_cost": {"speedup_vs_scalar": speedup},
+                "committed": {"speedup_vs_scalar": 12.0},
+            },
+            "greedy_least_used": {
+                "decision_cost": {"speedup_vs_scalar": 1.1},
+            },
+        },
+        "meta": {"schema_version": schema, "git_sha": sha, "smoke": smoke},
+    }
+
+
+def write(dirpath, name, data):
+    dirpath.mkdir(parents=True, exist_ok=True)
+    (dirpath / f"{name}.json").write_text(json.dumps(data))
+
+
+@pytest.fixture
+def dirs(tmp_path):
+    return tmp_path / "fresh", tmp_path / "baseline"
+
+
+class TestRegressionDetection:
+    def test_inflated_baseline_fails_the_gate(self, dirs):
+        fresh, base = dirs
+        write(fresh, "table2", payload(50.0))
+        # Baseline claims >20% more than the fresh run delivers.
+        write(base, "table2", payload(80.0))
+        failures, _ = gate.check_against(fresh, base, ["table2"])
+        assert len(failures) == 1
+        assert METRIC in failures[0]
+        assert "abc123" in failures[0]  # baseline sha surfaces in the report
+
+    def test_within_budget_passes(self, dirs):
+        fresh, base = dirs
+        write(fresh, "table2", payload(50.0))
+        write(base, "table2", payload(55.0))  # -9%: inside the 20% budget
+        failures, _ = gate.check_against(fresh, base, ["table2"])
+        assert failures == []
+
+    def test_improvement_passes(self, dirs):
+        fresh, base = dirs
+        write(fresh, "table2", payload(90.0))
+        write(base, "table2", payload(50.0))
+        failures, _ = gate.check_against(fresh, base, ["table2"])
+        assert failures == []
+
+    def test_boundary_is_exactly_the_threshold(self, dirs):
+        fresh, base = dirs
+        write(base, "table2", payload(100.0))
+        write(fresh, "table2", payload(80.0))  # exactly -20%: not a failure
+        failures, _ = gate.check_against(fresh, base, ["table2"])
+        assert failures == []
+        write(fresh, "table2", payload(79.9))  # just past the budget
+        failures, _ = gate.check_against(fresh, base, ["table2"])
+        assert len(failures) == 1
+
+    def test_custom_threshold(self, dirs):
+        fresh, base = dirs
+        write(base, "table2", payload(100.0))
+        write(fresh, "table2", payload(95.0))
+        failures, _ = gate.check_against(fresh, base, ["table2"], threshold=0.01)
+        assert len(failures) == 1
+
+
+class TestLikeForLike:
+    """Mismatched comparisons are skipped with a note, never failed."""
+
+    def test_smoke_mode_mismatch_is_skipped(self, dirs):
+        fresh, base = dirs
+        write(fresh, "table2", payload(10.0, smoke=True))
+        write(base, "table2", payload(80.0, smoke=False))  # full-sweep baseline
+        failures, notes = gate.check_against(fresh, base, ["table2"])
+        assert failures == []
+        assert any("smoke-mode mismatch" in n for n in notes)
+
+    def test_schema_version_mismatch_is_skipped(self, dirs):
+        fresh, base = dirs
+        write(fresh, "table2", payload(10.0))
+        write(base, "table2", payload(80.0, schema=SCHEMA_VERSION + 1))
+        failures, notes = gate.check_against(fresh, base, ["table2"])
+        assert failures == []
+        assert any("schema_version mismatch" in n for n in notes)
+
+    def test_missing_baseline_is_skipped(self, dirs):
+        fresh, base = dirs
+        write(fresh, "table2", payload(10.0))
+        failures, notes = gate.check_against(fresh, base, ["table2"])
+        assert failures == []
+        assert any("no baseline" in n for n in notes)
+
+    def test_missing_fresh_results_is_skipped(self, dirs):
+        fresh, base = dirs
+        write(base, "table2", payload(80.0))
+        failures, notes = gate.check_against(fresh, base, ["table2"])
+        assert failures == []
+        assert any("no fresh results" in n for n in notes)
+
+    def test_absent_metric_is_skipped(self, dirs):
+        fresh, base = dirs
+        slim = payload(50.0)
+        del slim["batched_greedy"]["greedy_min_storage"]["committed"]
+        write(fresh, "table2", slim)
+        write(base, "table2", payload(50.0))
+        failures, notes = gate.check_against(fresh, base, ["table2"])
+        assert failures == []
+        assert any("committed.speedup_vs_scalar" in n and "absent" in n
+                   for n in notes)
+
+    def test_ungated_benchmarks_are_ignored(self, dirs):
+        fresh, base = dirs
+        failures, notes = gate.check_against(fresh, base, ["fig12", "fig6"])
+        assert failures == [] and notes == []
+
+    def test_differing_benchmark_parameters_are_skipped(self, dirs):
+        # A re-tuned sweep (different node/batch counts) must be skipped
+        # until its baselines are regenerated, not gated apples-to-oranges.
+        fresh, base = dirs
+        retuned = payload(10.0)
+        retuned["batched_greedy"]["greedy_min_storage"]["n_nodes"] = 500
+        write(fresh, "table2", retuned)
+        sized = payload(80.0)
+        sized["batched_greedy"]["greedy_min_storage"]["n_nodes"] = 100
+        write(base, "table2", sized)
+        failures, notes = gate.check_against(fresh, base, ["table2"])
+        assert all("greedy_min_storage" not in f for f in failures)
+        assert any("parameters differ" in n for n in notes)
+
+    def test_damaged_baseline_json_is_skipped_not_fatal(self, dirs):
+        fresh, base = dirs
+        write(fresh, "table2", payload(50.0))
+        base.mkdir(parents=True, exist_ok=True)
+        (base / "table2.json").write_text("{truncated")
+        failures, notes = gate.check_against(fresh, base, ["table2"])
+        assert failures == []
+        assert any("no baseline" in n for n in notes)
+
+    def test_non_dict_payload_is_skipped_not_fatal(self, dirs):
+        fresh, base = dirs
+        base.mkdir(parents=True, exist_ok=True)
+        (base / "table2.json").write_text("[1, 2, 3]")
+        fresh.mkdir(parents=True, exist_ok=True)
+        (fresh / "table2.json").write_text(json.dumps(payload(50.0)))
+        failures, notes = gate.check_against(fresh, base, ["table2"])
+        assert failures == []
+        assert any("no baseline" in n for n in notes)
+
+
+class TestGateConfig:
+    def test_gated_metrics_exist_in_committed_smoke_baselines(self):
+        # The gate config must stay in lockstep with what table2 emits —
+        # a renamed metric would silently turn the gate into a no-op.
+        import pathlib
+
+        baseline = pathlib.Path("results/benchmarks/smoke/table2.json")
+        if not baseline.exists():
+            pytest.skip("no committed smoke baselines in this checkout")
+        data = json.loads(baseline.read_text())
+        assert data.get("meta", {}).get("smoke") is True
+        for dotted, direction in gate.GATE_METRICS["table2"]:
+            assert direction in ("higher", "lower")
+            node = data
+            for key in dotted.split("."):
+                assert isinstance(node, dict) and key in node, (
+                    f"gated metric {dotted!r} missing from the committed "
+                    f"smoke baseline"
+                )
+                node = node[key]
+            assert isinstance(node, (int, float))
