@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify test test-fast smoke-bench bench-check
+.PHONY: verify test test-fast smoke-bench bench-check bench-baseline
 
 ## Tier-1 gate: full test suite + smoke runs of the scheduling-overhead
 ## benchmark (batched place_many end to end) and the Fig. 12 failure
@@ -32,3 +32,13 @@ bench-check:
 	$(PYTHON) -m benchmarks.run --only table2,fig12 --smoke \
 		--out results/benchmarks/ci-smoke \
 		--check-against results/benchmarks/smoke
+
+## Regenerate the committed smoke baselines the gate compares against
+## (results/benchmarks/smoke/).  Run after an intentional perf change,
+## an intentional behavior change to the fig12 equality-gated retained
+## fractions, or when rebasing the gate onto a new machine class —
+## then review and commit the JSON diff.  Full workflow:
+## benchmarks/README.md.
+bench-baseline:
+	$(PYTHON) -m benchmarks.run --only table2,fig12 --smoke \
+		--out results/benchmarks/smoke

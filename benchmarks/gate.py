@@ -11,13 +11,23 @@ checks they are like-for-like (same ``meta.schema_version``, same
 smoke run), and fails (nonzero exit) if any gated metric regresses more
 than ``DEFAULT_THRESHOLD``.
 
-Gated metrics are *ratios* (vectorized-kernel speedup over the scalar
-oracle on the same machine in the same process), so they transfer
-across machine speeds far better than absolute milliseconds — a CI
-runner half as fast slows both sides of the ratio.  Both sides are
-timed min-of-reps (``common.scalar_vs_vectorized``) so load spikes
-cannot fake a regression.  Committed smoke baselines live in
-``results/benchmarks/smoke/``; regenerate them with::
+Gated metrics come in two kinds:
+
+* **ratios** (vectorized-kernel speedup over the scalar oracle on the
+  same machine in the same process), which transfer across machine
+  speeds far better than absolute milliseconds — a CI runner half as
+  fast slows both sides of the ratio.  Both sides are timed min-of-reps
+  (``common.scalar_vs_vectorized``) so load spikes cannot fake a
+  regression.  Direction ``"higher"``, budget ``DEFAULT_THRESHOLD``.
+* **deterministic equalities** (fig12's retained fractions: seeded
+  simulation, no timing anywhere), gated with direction ``"equal"`` —
+  any change at all fails, because a drifted retained fraction means
+  placement or repair *behavior* changed, not the machine.  Regenerate
+  the baselines when the change is intentional.
+
+Committed smoke baselines live in ``results/benchmarks/smoke/``;
+regenerate them with ``make bench-baseline`` (see benchmarks/README.md
+for the full workflow)::
 
     python -m benchmarks.run --only table2,fig12 --smoke \
         --out results/benchmarks/smoke
@@ -44,18 +54,36 @@ __all__ = ["DEFAULT_THRESHOLD", "GATE_METRICS", "check_against"]
 #: drops below (1 - threshold) x baseline.
 DEFAULT_THRESHOLD = 0.20
 
-#: benchmark name -> ((dotted metric path, direction), ...).  Only
-#: ratio-valued decision-cost metrics belong here (see module docstring);
-#: "higher" means higher is better.  GreedyLeastUsed's speedup is
-#: intentionally not gated: its scalar path is already dispatch-proof,
-#: so the ratio hovers near 1 and would gate on noise.
-GATE_METRICS: dict[str, tuple[tuple[str, str], ...]] = {
+#: benchmark name -> ((metric path, direction), ...).  A metric path is
+#: dotted, or a tuple of keys when a key itself contains a dot (fig12's
+#: reliability-target keys like "0.9").  "higher" means higher is
+#: better (ratio metrics, DEFAULT_THRESHOLD budget); "equal" means the
+#: value is deterministic and any drift fails (see module docstring).
+#: GreedyLeastUsed's speedup is intentionally not gated: its scalar
+#: path is already dispatch-proof, so the ratio hovers near 1 and would
+#: gate on noise.  LB's committed column likewise (its cluster-global
+#: penalty forces per-item rescoring, so the ratio hovers near 1).
+GATE_METRICS: dict[str, tuple[tuple, ...]] = {
     "table2": (
         ("batched_sc.decision_cost.speedup_vs_scalar", "higher"),
         ("batched_greedy.greedy_min_storage.decision_cost.speedup_vs_scalar",
          "higher"),
         ("batched_greedy.greedy_min_storage.committed.speedup_vs_scalar",
          "higher"),
+        ("batched_lb.standard.decision_cost.speedup_vs_scalar", "higher"),
+    ),
+    # Deterministic retained fractions: the smoke sweep's (rt, algo,
+    # n_failures) cells plus the repair-bandwidth endpoints.  Seeded
+    # simulation, pure numpy — equal or the behavior changed.
+    "fig12": (
+        (("0.9", "drex_sc", "2"), "equal"),
+        (("0.9", "drex_sc", "5"), "equal"),
+        (("0.9", "drex_lb", "2"), "equal"),
+        (("0.9", "drex_lb", "5"), "equal"),
+        (("0.9", "ec(3,2)", "2"), "equal"),
+        (("0.9", "ec(3,2)", "5"), "equal"),
+        (("repair_bw_sweep", "drex_sc", "inf", "retained_fraction"), "equal"),
+        (("repair_bw_sweep", "drex_sc", "0.01", "retained_fraction"), "equal"),
     ),
 }
 
@@ -66,21 +94,31 @@ GATE_METRICS: dict[str, tuple[tuple[str, str], ...]] = {
 _PARAM_KEYS = ("n_nodes", "batch", "n_items")
 
 
-def _lookup(payload: dict, dotted: str):
+def _path_keys(path) -> tuple:
+    """A metric path as a key tuple: dotted string, or already a tuple
+    when a key itself contains a dot (e.g. fig12's "0.9")."""
+    return tuple(path) if isinstance(path, (tuple, list)) else tuple(path.split("."))
+
+
+def _path_str(path) -> str:
+    return ".".join(_path_keys(path))
+
+
+def _lookup(payload: dict, path):
     node = payload
-    for key in dotted.split("."):
+    for key in _path_keys(path):
         if not isinstance(node, dict) or key not in node:
             return None
         node = node[key]
     return node
 
 
-def _params_along(payload: dict, dotted: str) -> dict:
+def _params_along(payload: dict, path) -> dict:
     """Benchmark parameters found in the dicts along a metric's path."""
     out = {}
     node = payload
     prefix = []
-    for key in dotted.split("."):
+    for key in _path_keys(path):
         if not isinstance(node, dict):
             break
         for pk in _PARAM_KEYS:
@@ -150,16 +188,17 @@ def check_against(
                 f"fresh smoke={new_meta.get('smoke')}); skipped"
             )
             continue
-        for dotted, direction in metrics:
-            old_v = _lookup(base, dotted)
-            new_v = _lookup(new, dotted)
+        for path, direction in metrics:
+            dotted = _path_str(path)
+            old_v = _lookup(base, path)
+            new_v = _lookup(new, path)
             if not isinstance(old_v, (int, float)) or not isinstance(
                 new_v, (int, float)
             ):
                 notes.append(f"{name}.{dotted}: metric absent; skipped")
                 continue
-            old_p = _params_along(base, dotted)
-            new_p = _params_along(new, dotted)
+            old_p = _params_along(base, path)
+            new_p = _params_along(new, path)
             if old_p != new_p:
                 notes.append(
                     f"{name}.{dotted}: benchmark parameters differ "
@@ -168,12 +207,24 @@ def check_against(
                 continue
             if direction == "higher":
                 regressed = new_v < old_v * (1.0 - threshold)
+                detail = f"worse than the {threshold:.0%} budget"
+            elif direction == "equal":
+                # Deterministic metric: any drift is a behavior change.
+                regressed = new_v != old_v
+                detail = "deterministic metric drifted"
             else:
                 regressed = new_v > old_v * (1.0 + threshold)
+                detail = f"worse than the {threshold:.0%} budget"
             if regressed:
+                # Equality drifts can be tiny: print full precision so
+                # the report shows the actual change, not two rounded
+                # identical-looking numbers.
+                if direction == "equal":
+                    shown = f"{new_v!r} vs baseline {old_v!r}"
+                else:
+                    shown = f"{new_v:.3f} vs baseline {old_v:.3f}"
                 failures.append(
-                    f"{name}.{dotted}: {new_v:.3f} vs baseline {old_v:.3f} "
-                    f"(worse than the {threshold:.0%} budget, "
+                    f"{name}.{dotted}: {shown} ({detail}, "
                     f"baseline sha {base_meta.get('git_sha') or 'unknown'})"
                 )
     return failures, notes

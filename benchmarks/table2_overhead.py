@@ -19,6 +19,13 @@ The ``batched_greedy`` section applies the same protocol to the greedy
 kernels (repro.core.greedy_kernel) at ``greedy_nodes`` nodes — the
 GreedyMinStorage decision-cost column is the headline number the
 benchmark-regression gate (benchmarks/gate.py) protects.
+
+The ``batched_lb`` section does the same for the D-Rex LB kernel
+(repro.core.lb_kernel) at ``n_nodes`` and again at ``greedy_nodes``
+nodes; its decision-cost speedup is gated alongside SC's.  The section
+also stamps the shared shape-bucket compile-cache census
+(``repro.core.shapes.compile_cache_stats``) so recompile counts are
+visible in the emitted telemetry.
 """
 
 import time
@@ -28,6 +35,7 @@ import numpy as np
 from repro.core import (
     BatchContext,
     ClusterView,
+    compile_cache_stats,
     DataItem,
     PlacementEngine,
     StorageNode,
@@ -120,6 +128,11 @@ def run(
     table["batched_greedy"] = _greedy_scalar_vs_vectorized(
         greedy_nodes, greedy_batch, lines
     )
+
+    # -- D-Rex LB: scalar numpy oracle vs jitted/vmapped kernel --------------
+    table["batched_lb"] = _lb_scalar_vs_vectorized(
+        n_nodes, batch, greedy_nodes, greedy_batch, lines
+    )
     emit("table2", table)
     return lines
 
@@ -151,6 +164,54 @@ def _sc_scalar_vs_vectorized(n_nodes: int, batch: int, lines: list[str]) -> dict
                 f"scalar_vs_vectorized={cols['speedup_vs_scalar']:.2f}x",
             )
         )
+    return out
+
+
+def _lb_scalar_vs_vectorized(
+    n_nodes: int, batch: int, big_nodes: int, big_batch: int, lines: list[str]
+) -> dict:
+    """Scalar-oracle vs vectorized-kernel scheduling overhead for D-Rex
+    LB (repro.core.lb_kernel), at the standard 100-node point and again
+    at the greedy section's large-cluster point.
+
+    Decision cost (``auto_commit=False``) scores the whole queue in
+    ~one vmapped call — the Table-2 protocol and the gated metric.  The
+    committed column is honest about LB's conservative rescoring: its
+    balance penalty depends on the cluster-wide mean free space, so
+    every commit invalidates the remaining scores and the engine
+    degrades to per-item calls (which dispatch to the kernel only above
+    ``DRexLB.KERNEL_MIN_NODES`` live nodes).
+    """
+    from .common import scalar_vs_vectorized
+
+    out = {}
+    points = (("standard", n_nodes, batch), ("large", big_nodes, big_batch))
+    for point, label_nodes, label_batch in points:
+        items = [
+            DataItem(i, 117.0, float(i), 365.0, 0.999)
+            for i in range(label_batch)
+        ]
+        cols_n = {"n_nodes": label_nodes, "batch": label_batch}
+        for label, auto_commit in (("decision_cost", False), ("committed", True)):
+            cols = scalar_vs_vectorized(
+                lambda: PlacementEngine(
+                    _cluster(label_nodes), create_scheduler("drex_lb"),
+                    auto_commit=auto_commit,
+                ),
+                items,
+            )
+            cols_n[label] = cols
+            lines.append(
+                csv_row(
+                    f"table2_drex_lb_{label}_n{label_nodes}_vectorized",
+                    cols["vectorized_ms_per_item"] * 1e3,
+                    f"scalar_vs_vectorized={cols['speedup_vs_scalar']:.2f}x",
+                )
+            )
+        out[point] = cols_n
+    # Recompile census for the whole table2 run (all kernels share the
+    # shapes bucketer; see tests/test_shapes.py for the churn budget).
+    out["compile_cache"] = compile_cache_stats()
     return out
 
 

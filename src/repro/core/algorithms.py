@@ -25,7 +25,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from . import greedy_kernel, sc_kernel
+from . import greedy_kernel, lb_kernel, sc_kernel
 from .registry import (
     create_scheduler,
     get_spec,
@@ -138,12 +138,13 @@ def _kernel_dispatch(
     return live >= scheduler.KERNEL_MIN_NODES
 
 
-class _GreedyKernelMixin:
-    """Kernel/scalar dispatch shared by the greedy schedulers, whose
-    vectorized paths live in :mod:`repro.core.greedy_kernel`.  Concrete
-    classes provide the scalar oracle (``_place_scalar``), the batched
-    kernel path (``_place_kernel``) and the ``KERNEL_MIN_NODES``
-    crossover."""
+class _KernelSchedulerMixin:
+    """Kernel/scalar dispatch shared by the kernel-backed prefix
+    schedulers (the greedys on :mod:`repro.core.greedy_kernel`, D-Rex LB
+    on :mod:`repro.core.lb_kernel`).  Concrete classes set
+    ``KERNEL_MODULE`` and provide the scalar oracle (``_place_scalar``),
+    the batched kernel path (``_place_kernel``) and the
+    ``KERNEL_MIN_NODES`` crossover."""
 
     #: set to False to force the scalar numpy oracle even when jax is
     #: present.
@@ -151,10 +152,13 @@ class _GreedyKernelMixin:
     #: live-node crossover for batched (>= 4 item) dispatch; 0 = batches
     #: always use the kernel (see :func:`_kernel_dispatch`).
     KERNEL_MIN_NODES_BATCH = 0
+    #: module providing ``kernel_available()`` for this scheduler's
+    #: vectorized path; set by concrete classes.
+    KERNEL_MODULE = None
 
     def _kernel_wins(self, cluster: ClusterView, batch: int) -> bool:
         return _kernel_dispatch(
-            self, greedy_kernel.kernel_available(), cluster, batch
+            self, self.KERNEL_MODULE.kernel_available(), cluster, batch
         )
 
     def place(self, item: DataItem, cluster: ClusterView, ctx=None) -> Decision:
@@ -192,7 +196,7 @@ class _GreedyKernelMixin:
     supports_parity_growth=True,
     batch_scoring=True,
 )
-class GreedyMinStorage(_GreedyKernelMixin, Scheduler):
+class GreedyMinStorage(_KernelSchedulerMixin, Scheduler):
     """Minimize per-item storage footprint ``(size/K) * N`` s.t. reliability
     (Eq. 4); mapping favors the fastest (write-bandwidth) nodes *among
     those with room for the chunk* — once the fast nodes saturate the
@@ -213,6 +217,7 @@ class GreedyMinStorage(_GreedyKernelMixin, Scheduler):
     """
 
     name = "greedy_min_storage"
+    KERNEL_MODULE = greedy_kernel
     #: below this many live nodes a single-item kernel call is dispatch-
     #: bound and the scalar oracle wins; batches of >= 4 items amortize
     #: dispatch and use the kernel regardless (measured crossover,
@@ -379,8 +384,9 @@ class GreedyMinStorage(_GreedyKernelMixin, Scheduler):
     adaptive=True,
     supports_parity_growth=True,
     batch_scoring=True,
+    windowed_scoring=True,
 )
-class GreedyLeastUsed(_GreedyKernelMixin, Scheduler):
+class GreedyLeastUsed(_KernelSchedulerMixin, Scheduler):
     """Minimize ``K+P`` s.t. reliability (Eq. 5); nodes with the highest
     free space get the chunks (then minimal parity among feasible).
     ``K >= 2`` as in Alg. 1 — the paper's erasure-coding schedulers do not
@@ -391,9 +397,20 @@ class GreedyLeastUsed(_GreedyKernelMixin, Scheduler):
     (:mod:`repro.core.greedy_kernel`) evaluates the whole first-feasible-N
     scan as one masked DP, vmapped across items in :meth:`place_batch`.
     Equivalence is pinned by tests/test_greedy_vectorized.py.
+
+    Declares ``windowed_scoring``: a successful decision is a pure
+    function of the free-desc order, the item, the failure probabilities
+    and the free space of the *scanned prefix* — which is exactly the
+    chosen mapping, since every probed N < N_chosen maps a sub-prefix of
+    it.  Decisions therefore carry ``window = node_ids``, and the
+    engine's dependency-aware rescoring may keep them across a commit
+    that neither touches the window nor perturbs the free-desc order
+    (see ``PlacementEngine._place_many_batched``).  Rejections scanned
+    every live node and carry no window (always re-scored).
     """
 
     name = "greedy_least_used"
+    KERNEL_MODULE = greedy_kernel
     #: the scalar scan stops at the first feasible N (typically < 10), so
     #: a single-item kernel call is dispatch-bound at any realistic
     #: cluster size (measured: the scalar oracle wins even at 500 nodes);
@@ -437,10 +454,12 @@ class GreedyLeastUsed(_GreedyKernelMixin, Scheduler):
             mapping = by_free[:n]
             if not self._fits(cluster, mapping, chunk):
                 continue
+            ids = tuple(int(x) for x in mapping)
             return Decision(
-                Placement(k=k, p=p_star, node_ids=tuple(int(x) for x in mapping)),
+                Placement(k=k, p=p_star, node_ids=ids),
                 considered,
                 "",
+                window=ids,
             )
         return Decision(None, considered, "no N satisfies reliability+capacity")
 
@@ -474,15 +493,13 @@ class GreedyLeastUsed(_GreedyKernelMixin, Scheduler):
                     )
                 continue
             n = int(ns[row])
+            ids = tuple(int(x) for x in by_free[:n])
             decisions.append(
                 Decision(
-                    Placement(
-                        k=int(ks[row]),
-                        p=int(ps[row]),
-                        node_ids=tuple(int(x) for x in by_free[:n]),
-                    ),
+                    Placement(k=int(ks[row]), p=int(ps[row]), node_ids=ids),
                     n - 1,  # the scalar scan increments considered per N
                     "",
+                    window=ids,
                 )
             )
         return decisions
@@ -493,62 +510,181 @@ class GreedyLeastUsed(_GreedyKernelMixin, Scheduler):
 # ---------------------------------------------------------------------------
 
 
-@register_scheduler("drex_lb", adaptive=True, supports_parity_growth=True)
-class DRexLB(Scheduler):
-    """Balance-penalty minimization; smallest feasible parity (Alg. 1)."""
+@register_scheduler(
+    "drex_lb", adaptive=True, supports_parity_growth=True, batch_scoring=True
+)
+class DRexLB(_KernelSchedulerMixin, Scheduler):
+    """Balance-penalty minimization; smallest feasible parity (Alg. 1).
+
+    Two implementations of the same decision function: the scalar numpy
+    oracle (:meth:`place_scalar` — the per-P scan below, penalties
+    vectorized over K) and the jitted jax kernel
+    (:mod:`repro.core.lb_kernel`), which evaluates the full (K, P) grid
+    in one shot and is vmapped over items in :meth:`place_batch`.
+
+    **Exactness policy** (see the lb_kernel module docstring): the
+    balance penalty's in-mapping sum is accumulated in plain
+    left-to-right prefix-sum order on both paths (``np.cumsum`` here, an
+    explicit ``lax.scan`` carry in the kernel), and every other
+    order-sensitive quantity — ``f_avg``, the out-of-mapping suffix
+    sums, and the :class:`ParityFrontier` rows themselves — is a
+    host-computed numpy value the kernel consumes as an input, so kernel
+    decisions are bit-for-bit equal to this oracle with no fallback
+    regimes (pinned by tests/test_lb_vectorized.py).
+
+    No ``windowed_scoring``: every score depends on ``f_avg`` — the mean
+    free space over *all* live nodes — so any commit anywhere shifts
+    every pending penalty and batched scores can never outlive a commit
+    (the engine's dependency-aware rescoring correctly invalidates them).
+    """
 
     name = "drex_lb"
+    KERNEL_MODULE = lb_kernel
+    #: below this many live nodes a single-item kernel call is dispatch-
+    #: bound and the (vectorized-numpy) scalar oracle wins — LB's oracle
+    #: is grid-shaped too, so the single-item crossover sits much higher
+    #: than SC's (~0.6x at 200 nodes, ~2x at 500; measured,
+    #: benchmarks/table2).  Batches of >= 4 items amortize dispatch and
+    #: use the kernel regardless (6-10x at 100-500 nodes).  Set to 0 to
+    #: force the kernel (tests do).
+    KERNEL_MIN_NODES = 256
 
-    def place(self, item: DataItem, cluster: ClusterView, ctx=None) -> Decision:
-        self.observe_item(item)
+    @staticmethod
+    def _considered(L: int, p_found: int | None) -> int:
+        """Candidates the scalar per-(P, K) loop enumerates: for each
+        probed P it scans K = 2..L-P (``L - 1 - p`` candidates), stopping
+        after the first feasible P (or exhausting P = 1..L-1)."""
+        p_last = L - 1 if p_found is None else p_found
+        return p_last * (L - 1) - p_last * (p_last + 1) // 2
+
+    # -- scalar oracle ------------------------------------------------------
+
+    def _place_scalar(
+        self, item: DataItem, cluster: ClusterView, ctx=None
+    ) -> Decision:
         by_free = self._live_sorted(cluster, cluster.free_mb)
         L = len(by_free)
         if L < 3:  # Alg. 1 needs K>=2 and P>=1
             return Decision(None, 0, "fewer than 3 live nodes")
         fail_all = self._fail_probs(cluster, item, ctx)
-        free = cluster.free_mb
-        f_avg = float(free[by_free].mean())  # line 1
+        free_sorted = cluster.free_mb[by_free]
+        f_avg = float(free_sorted.mean())  # line 1
         # |F(S_j) - F_avg| for every node once; penalties for out-of-mapping
         # nodes are suffix sums over the sorted order (mapping is a prefix).
-        dev = np.abs(free[by_free] - f_avg)
+        dev = np.abs(free_sorted - f_avg)
         suffix = np.concatenate([np.cumsum(dev[::-1])[::-1], [0.0]])
         # One frontier answers the (prefix, parity) feasibility question for
         # every (K, P) pair: CDF_n(p) >= RT  <=>  min_parity(n) <= p.
         frontier = self._frontier(
             fail_all[by_free], item.reliability_target, ctx
         )
+        mp_all = frontier.upto(L)
 
-        considered = 0
+        # lines 10-15 for every K at once: the in-mapping penalty of the
+        # (K, P) pair is the length-(K+P) prefix sum of the chunk-adjusted
+        # deviations, accumulated left-to-right (np.cumsum — the fixed
+        # summation order the kernel reproduces; see class docstring).
+        ks = np.arange(2, L)                       # K = 2..L-1
+        chunk_k = item.size_mb / ks.astype(np.float64)
+        pen = np.cumsum(
+            np.abs(free_sorted[None, :] - chunk_k[:, None] - f_avg), axis=1
+        )
+
         for p in range(1, L):  # line 5
-            min_bp = math.inf
-            min_k = -1
-            for k in range(2, L - p + 1):  # line 6
-                n = k + p
-                considered += 1
-                mp = frontier.min_parity(n)
-                if mp < 0 or mp > p:
-                    continue
-                chunk = item.size_mb / k
-                mapping = by_free[:n]
-                if not self._fits(cluster, mapping, chunk):
-                    continue
-                # lines 10-15: balance penalty
-                bp = float(np.abs(free[mapping] - chunk - f_avg).sum()) + float(
-                    suffix[n]
+            k_arr = ks[: L - p - 1]                # K = 2..L-P
+            if k_arr.size == 0:
+                continue
+            n_arr = k_arr + p
+            mp = mp_all[n_arr - 1]
+            feas = (
+                (mp >= 0)
+                & (mp <= p)
+                & (free_sorted[n_arr - 1] >= chunk_k[: k_arr.size])
+            )
+            if not np.any(feas):
+                continue
+            # line 22: stop at the smallest feasible P; best (strictly
+            # smallest penalty, earliest K on ties) K within it.
+            bp = np.where(
+                feas, pen[np.arange(k_arr.size), n_arr - 1] + suffix[n_arr],
+                np.inf,
+            )
+            k = int(k_arr[int(np.argmin(bp))])
+            n = k + p
+            return Decision(
+                Placement(
+                    k=k, p=p, node_ids=tuple(int(x) for x in by_free[:n])
+                ),
+                self._considered(L, p),
+                "",
+            )
+        return Decision(
+            None, self._considered(L, None),
+            "no (K,P) satisfies reliability+capacity",
+        )
+
+    # -- vectorized path ----------------------------------------------------
+
+    def _place_kernel(
+        self, items: list[DataItem], cluster: ClusterView, ctx
+    ) -> list[Decision]:
+        by_free = self._live_sorted(cluster, cluster.free_mb)
+        L = len(by_free)
+        if L < 3:
+            return [Decision(None, 0, "fewer than 3 live nodes") for _ in items]
+        free_sorted = cluster.free_mb[by_free]
+        # Order-sensitive global terms, host-computed exactly as the
+        # scalar oracle computes them (numpy pairwise mean / reversed
+        # cumsum); the kernel consumes them as inputs.
+        f_avg = float(free_sorted.mean())
+        dev = np.abs(free_sorted - f_avg)
+        suffix = np.concatenate([np.cumsum(dev[::-1])[::-1], [0.0]])
+        # Host parity-frontier rows — the very DP the oracle consults
+        # (equivalence by construction; see the lb_kernel docstring).
+        # Items sharing (fail probs, target) pay for one frontier per
+        # batch; the BatchContext extends that across commit groups.
+        memo: dict[tuple[bytes, float], np.ndarray] = {}
+        mp_rows = np.empty((len(items), L), dtype=np.int64)
+        for row, item in enumerate(items):
+            probs = self._fail_probs(cluster, item, ctx)[by_free]
+            if ctx is not None:
+                fr = ctx.frontier(probs, item.reliability_target)
+            else:
+                key = (probs.tobytes(), item.reliability_target)
+                fr = memo.get(key)
+                if fr is None:
+                    fr = ParityFrontier(probs, item.reliability_target)
+                    memo[key] = fr
+            mp_rows[row] = fr.upto(L)
+        ok, ks, ps = lb_kernel.lb_batch(
+            mp_rows,
+            np.array([it.size_mb for it in items], dtype=np.float64),
+            free_sorted,
+            f_avg,
+            suffix,
+        )
+        decisions = []
+        for row in range(len(items)):
+            if not ok[row]:
+                decisions.append(
+                    Decision(
+                        None, self._considered(L, None),
+                        "no (K,P) satisfies reliability+capacity",
+                    )
                 )
-                if bp < min_bp:
-                    min_bp = bp
-                    min_k = k
-            if min_k != -1:  # line 22: stop at the smallest feasible P
-                n = min_k + p
-                return Decision(
+                continue
+            k, p = int(ks[row]), int(ps[row])
+            decisions.append(
+                Decision(
                     Placement(
-                        k=min_k, p=p, node_ids=tuple(int(x) for x in by_free[:n])
+                        k=k, p=p,
+                        node_ids=tuple(int(x) for x in by_free[: k + p]),
                     ),
-                    considered,
+                    self._considered(L, p),
                     "",
                 )
-        return Decision(None, considered, "no (K,P) satisfies reliability+capacity")
+            )
+        return decisions
 
 
 # ---------------------------------------------------------------------------

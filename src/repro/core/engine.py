@@ -18,7 +18,11 @@ benchmarks) each reimplemented ad hoc:
   per batch instead of once per item.  Caches key on the *exact inputs*
   of each computation, so batched placements are bit-identical to
   sequential ``place`` calls — the DP cost of D-Rex SC simply amortizes
-  whenever consecutive items see an unchanged sort order.
+  whenever consecutive items see an unchanged sort order.  Rescoring
+  after a commit is *dependency-aware*: schedulers declaring the
+  ``windowed_scoring`` capability keep pending scores whose
+  ``Decision.window`` is provably untouched (see
+  :meth:`PlacementEngine._place_many_batched`).
 * **repair planning** — :meth:`PlacementEngine.plan_repair` routes
   degraded-item re-placement through the shared
   :class:`~repro.core.repair.RepairPlanner` (capability-gated parity
@@ -287,10 +291,13 @@ class PlacementEngine:
           driven through :meth:`Scheduler.place_batch`, which scores many
           queued items against one cluster snapshot in a single
           vectorized call.  A committed placement changes the snapshot,
-          so any decisions scored for later items are *stale* and are
-          re-scored against the post-commit state (see
-          :meth:`_place_many_batched`) — batched placement never reuses a
-          score computed against pre-commit free space.
+          so pending decisions are re-scored against the post-commit
+          state — except decisions a ``windowed_scoring`` scheduler has
+          *proven* independent of the commit (disjoint
+          ``Decision.window``, unchanged free-desc order), which are
+          exactly what rescoring would return (see
+          :meth:`_place_many_batched`).  Batched placement never
+          consumes a score the commit could have affected.
 
         With ``atomic=True`` the whole batch is rolled back if any item
         is rejected (records then carry ``committed=False``).
@@ -328,21 +335,45 @@ class PlacementEngine:
 
         The scheduler scores a group of items against the current
         cluster snapshot in one vectorized call; decisions are consumed
-        in arrival order until a commit mutates the cluster, at which
-        point the remaining scores were computed against pre-commit
-        state and are discarded — those items are re-scored against the
-        post-commit snapshot on the next iteration.  Group size adapts:
-        commit-heavy workloads degrade to per-item kernel calls (still
-        vectorized over windows), while non-committing engines
-        (``auto_commit=False``, the Table-2 protocol) score the whole
-        queue in ~one call.  Results are bit-identical to sequential
-        :meth:`place`.
+        in arrival order.  A committed placement mutates the cluster, so
+        not-yet-consumed scores are *stale* by default and the remainder
+        of the group is re-scored against the post-commit snapshot.
+
+        **Dependency-aware rescoring.**  Schedulers declaring the
+        ``windowed_scoring`` capability emit decisions whose scores are
+        pure functions of the free-desc node order plus the free space
+        of their ``Decision.window`` nodes.  For those, a commit only
+        invalidates the pending scores it can actually affect: a pending
+        decision survives while (a) its window is disjoint from every
+        node committed since the group was scored and (b) the free-desc
+        order of live nodes is unchanged — both checked here, so a kept
+        score is *provably* equal to what rescoring would return, and a
+        score whose window intersects a committed mapping is never
+        reused.  Decisions without a window (rejections, conservative
+        schedulers) always trigger the rescore.  Pinned by
+        ``TestBatchStaleness`` in tests/test_engine.py.
+
+        Group size adapts: commit-heavy workloads without windowed
+        scoring degrade to per-item kernel calls (still vectorized over
+        candidates), while non-committing engines (``auto_commit=False``,
+        the Table-2 protocol) and windowed schedulers with disjoint
+        traffic score the whole queue in ~one call.  Results are
+        bit-identical to sequential :meth:`place`.
         """
         records: list[PlacementRecord] = []
         i, n = 0, len(items)
-        chunk = min(n, self.MAX_SCORING_GROUP) if not self.auto_commit else 1
+        windowed = self.capabilities.windowed_scoring
+        if not self.auto_commit or windowed:
+            chunk = min(n, self.MAX_SCORING_GROUP)
+        else:
+            chunk = 1
         while i < n:
             group = items[i : i + chunk]
+            order0 = (
+                self._free_desc_order()
+                if windowed and self.auto_commit and len(group) > 1
+                else None
+            )
             t0 = time.perf_counter()
             decisions = self.scheduler.place_batch(group, self.cluster, ctx=ctx)
             elapsed = time.perf_counter() - t0
@@ -353,8 +384,20 @@ class PlacementEngine:
                 )
             per_item = elapsed / len(group)
             used = 0
-            committed = False
+            committed_nodes: set[int] = set()
+            order_unchanged = True
+            stale = False
+            reused = False
             for item, decision in zip(group, decisions):
+                if committed_nodes:
+                    if not (
+                        order_unchanged
+                        and decision.window is not None
+                        and committed_nodes.isdisjoint(decision.window)
+                    ):
+                        stale = True
+                        break  # this score saw pre-commit state: rescore
+                    reused = True
                 # place_batch is pure; the scheduler observes the item
                 # only as its decision is consumed (matching sequential
                 # place, where observation precedes the item's scoring).
@@ -362,20 +405,41 @@ class PlacementEngine:
                 records.append(self._finalize(item, decision, per_item))
                 used += 1
                 if records[-1].committed:
-                    committed = True
-                    if used < len(group):
-                        break  # remaining scores are pre-commit: rescore
+                    committed_nodes.update(records[-1].placement.node_ids)
+                    if order0 is not None and order_unchanged:
+                        order_unchanged = np.array_equal(
+                            order0, self._free_desc_order()
+                        )
+                    elif order0 is None:
+                        # Conservative schedulers never reuse across a
+                        # commit; skip the order bookkeeping entirely.
+                        order_unchanged = False
             i += used
             # Per-record overhead is the amortized share of the scoring
             # call; scores discarded by a mid-group commit still cost
             # wall time, so charge the unconsumed share to the aggregate
             # gauge (stats['overhead_s'] tracks real scheduling time).
             self.stats["overhead_s"] += elapsed - used * per_item
-            if committed:
+            # Grow the scoring group only while scores are being consumed
+            # wholesale: a stale break — or a commit no score survived
+            # (non-windowed schedulers always; windowed ones whose
+            # windows happened to collide) — degrades to per-item calls
+            # rather than oscillating and re-wasting scores.
+            if stale or (committed_nodes and not reused):
                 chunk = 1
             elif used == len(group) and i < n:
                 chunk = min(chunk * 2, self.MAX_SCORING_GROUP, n - i)
         return records
+
+    def _free_desc_order(self) -> np.ndarray:
+        """Live node ids in free-space-descending order — the sort every
+        windowed-scoring scheduler's decisions are relative to.  Calls
+        the schedulers' own ``_live_sorted`` so the reuse-soundness
+        check and the schedulers can never disagree on key or
+        tie-breaking."""
+        from .algorithms import Scheduler  # deferred: no import cycle
+
+        return Scheduler._live_sorted(self.cluster, self.cluster.free_mb)
 
     # -- repair ---------------------------------------------------------------
 

@@ -41,15 +41,18 @@ reference:
 (:class:`ParityFrontier`) and its mapping is always the free-desc prefix,
 so the whole first-feasible-N scan runs in-jit.
 
-D-Rex LB (§4.3) stays on the scalar path: its balance penalty is a
-pairwise numpy summation over per-(K,P) chunk-adjusted deviations whose
-float grouping cannot be reproduced on a padded grid without changing
-argmin outcomes in ulp-tight cases, so it does not fit this kernel's
-bit-for-bit contract.
+D-Rex LB (§4.3) has its own kernel in :mod:`repro.core.lb_kernel`,
+which resolves the balance penalty's summation-order problem by fixing
+both paths to prefix-sum order and takes its parity frontiers as host
+inputs from the oracle's own :class:`ParityFrontier` (the same
+equivalence-by-construction move as this module's RNA rows; see that
+module's docstring).
 
 Everything runs in float64 under a scoped ``jax.experimental.enable_x64``
 (availability targets with many nines need the full mantissa); when jax
-is unavailable the callers fall back to the scalar oracles.
+is unavailable the callers fall back to the scalar oracles.  Pad
+planning goes through :mod:`repro.core.shapes` (shared hysteresis-banded
+buckets + compile-cache census).
 """
 
 from __future__ import annotations
@@ -58,6 +61,7 @@ import functools
 
 import numpy as np
 
+from . import shapes
 from .reliability import _AUTO_EXACT_LIMIT, rna_parity_frontier
 
 try:  # pragma: no cover - exercised implicitly by every greedy-kernel test
@@ -81,10 +85,6 @@ __all__ = [
 def kernel_available() -> bool:
     """True when the jitted scoring paths can run (jax importable)."""
     return _JAX_OK
-
-
-def _round_up(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
 
 
 def rna_frontier_row(fail_sorted: np.ndarray, target: float, L: int) -> np.ndarray:
@@ -241,9 +241,8 @@ if _JAX_OK:
 
 
 def _pad_batch(B: int, L: int):
-    L_pad = max(8, _round_up(L, 8))
-    B_pad = 1 << max(0, B - 1).bit_length()
-    return B_pad, L_pad
+    """Shared hysteresis-banded pads (see :mod:`repro.core.shapes`)."""
+    return shapes.batch_pad(B), shapes.node_pad(L)
 
 
 def _pad_to(a: np.ndarray, size: int, fill: float) -> np.ndarray:
@@ -273,6 +272,7 @@ def least_used_batch(
         z = np.zeros(B, dtype=np.int64)
         return z.astype(bool), z, z, z
     B_pad, L_pad = _pad_batch(B, L)
+    shapes.record_compile("least_used_kernel", (B_pad, L_pad))
     pm = np.zeros((B_pad, L_pad), dtype=np.float64)
     pm[:B, :L] = probs_mat
     with enable_x64():
@@ -320,6 +320,7 @@ def min_storage_batch(
             np.full(shape, np.inf),
         )
     B_pad, L_pad = _pad_batch(B, L)
+    shapes.record_compile("min_storage_kernel", (B_pad, L_pad))
     pm = np.zeros((B_pad, L_pad), dtype=np.float64)
     pm[:B, :L] = probs_mat
     rna = np.full((B_pad, L_pad + 1), -1, dtype=np.int64)

@@ -61,10 +61,21 @@ class SchedulerCapabilities:
     #: decisions identical to sequential ``place`` while the cluster is
     #: unchanged.  Consumed by ``PlacementEngine.place_many`` (which
     #: re-scores items invalidated by a commit); never match on names.
-    #: Declared by D-Rex SC (core/sc_kernel) and both greedy baselines
-    #: (core/greedy_kernel); the scalar paths survive as the equivalence
-    #: oracles (``place_scalar``).
+    #: Declared by D-Rex SC (core/sc_kernel), both greedy baselines
+    #: (core/greedy_kernel) and D-Rex LB (core/lb_kernel); the scalar
+    #: paths survive as the equivalence oracles (``place_scalar``).
     batch_scoring: bool = False
+    #: ``place_batch`` decisions carry a ``Decision.window`` naming the
+    #: node ids their score depends on, and the decision is a pure
+    #: function of (item, failure probs, the free-desc order of live
+    #: nodes, free space of the window nodes) — nothing else.  Lets the
+    #: engine's dependency-aware rescoring keep a pending score across a
+    #: commit that is disjoint from its window and leaves the free-desc
+    #: order unchanged.  Schedulers whose scores depend on cluster-global
+    #: terms (D-Rex LB's ``f_avg``, D-Rex SC's saturation baseline,
+    #: GreedyMinStorage's cluster-wide capacity filter) must NOT declare
+    #: this; only GreedyLeastUsed qualifies among the built-ins.
+    windowed_scoring: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,6 +97,7 @@ def register_scheduler(
     supports_parity_growth: bool = False,
     randomized: bool = False,
     batch_scoring: bool = False,
+    windowed_scoring: bool = False,
     doc: str = "",
 ):
     """Class/factory decorator adding one named algorithm to the registry.
@@ -99,6 +111,7 @@ def register_scheduler(
         supports_parity_growth=supports_parity_growth,
         randomized=randomized,
         batch_scoring=batch_scoring,
+        windowed_scoring=windowed_scoring,
     )
 
     def deco(factory):
@@ -124,6 +137,7 @@ def register_scheduler_family(
     supports_parity_growth: bool = False,
     randomized: bool = False,
     batch_scoring: bool = False,
+    windowed_scoring: bool = False,
     doc: str = "",
 ):
     """Register a parameterized family, e.g. ``ec(K,P)``.
@@ -137,6 +151,7 @@ def register_scheduler_family(
         supports_parity_growth=supports_parity_growth,
         randomized=randomized,
         batch_scoring=batch_scoring,
+        windowed_scoring=windowed_scoring,
     )
 
     def deco(factory):

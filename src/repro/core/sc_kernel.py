@@ -32,6 +32,8 @@ import math
 
 import numpy as np
 
+from . import shapes
+
 try:  # pragma: no cover - exercised implicitly by every SC test
     import jax
     import jax.numpy as jnp
@@ -48,10 +50,6 @@ __all__ = ["kernel_available", "score_windows_batch"]
 def kernel_available() -> bool:
     """True when the jitted scoring path can run (jax importable)."""
     return _JAX_OK
-
-
-def _round_up(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
 
 
 if _JAX_OK:
@@ -210,15 +208,16 @@ if _JAX_OK:
 
 
 def _shape_plan(L: int, budget: int) -> tuple[int, int]:
-    """Static (S_pad, L_pad) for a live-node count: L padded for shape
-    stability, starts covering every budgeted window."""
-    L_pad = max(8, _round_up(L, 8))
+    """Static (S_pad, L_pad) for a live-node count: L padded through the
+    shared hysteresis-banded buckets (:mod:`repro.core.shapes`), starts
+    covering every budgeted window."""
+    L_pad = shapes.node_pad(L)
     if L_pad <= 64:
         return L_pad - 1, L_pad  # every start can matter; keep stable
     w = L - 1 - np.arange(L - 1)
     consider = min(int(w.sum()), budget)
     s_real = int(np.searchsorted(np.cumsum(w), consider) + 1)
-    return min(L_pad - 1, _round_up(s_real, 4)), L_pad
+    return min(L_pad - 1, shapes.start_pad(s_real)), L_pad
 
 
 def score_windows_batch(
@@ -250,7 +249,8 @@ def score_windows_batch(
         z = np.zeros(B, dtype=np.int64)
         return z.astype(bool), z, z, z, z
     S_pad, L_pad = _shape_plan(L, budget)
-    B_pad = 1 << max(0, B - 1).bit_length()
+    B_pad = shapes.batch_pad(B)
+    shapes.record_compile("sc_kernel", (B_pad, S_pad, L_pad, int(budget)))
 
     def pad_nodes(a, fill):
         out = np.full(L_pad, fill, dtype=np.float64)

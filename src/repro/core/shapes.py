@@ -1,0 +1,203 @@
+"""Shared shape-bucket planning + compile-cache accounting for the jitted
+placement kernels (:mod:`sc_kernel`, :mod:`greedy_kernel`,
+:mod:`lb_kernel`).
+
+Every jitted kernel is compiled once per *static shape signature* —
+padded node count, padded batch size, candidate-axis width.  Before this
+module each kernel planned its own pads (``_round_up(L, 8)`` ladders,
+power-of-two batch pads), which meant an elastic cluster churning
+through ``node_join``/``node_heal`` events triggered a fresh ~100 ms-1 s
+XLA compile every time the live-node count crossed an 8-boundary — and
+three kernels crossed three boundaries independently.  This module is
+the one place pad planning lives:
+
+* **Geometric rungs.**  Node-axis pads are exact multiples of 8 up to
+  ``GEOMETRIC_FROM`` (the exact-DP regime, where compiles are cheap and
+  sizes small), then grow by ``GROWTH`` per rung — so a cluster scaling
+  from 100 to 200 nodes one join at a time recompiles O(log) times, not
+  once per 8 joins.  Batch pads stay powers of two (already geometric).
+* **Hysteresis band.**  A :class:`ShapeBucketer` remembers the last pad
+  it issued per axis kind and keeps issuing it while the requested size
+  stays within the band (``n <= held`` and ``held <= SHRINK_BAND x``
+  the natural rung) — so join/heal oscillation around a rung boundary
+  reuses one compiled shape instead of flapping between two, and a
+  briefly-shrunk cluster does not recompile on the way back up.
+* **Compile-cache counter.**  Kernels report the exact static signature
+  of every batch call through :func:`record_compile`; distinct
+  signatures are what XLA compiles, so :func:`compile_cache_stats`
+  is a true recompile census.  Exposed as benchmark telemetry
+  (``benchmarks/table2_overhead.py`` stamps it into the ``batched_lb``
+  section) and pinned by the churn-budget regression test in
+  tests/test_shapes.py.
+
+Pads only ever *enlarge* the masked region of a kernel's tensors; the
+kernels mask every padded lane via the traced live-node count, so
+decisions are invariant to which bucket a call lands in (the
+golden-equivalence suites run under arbitrary bucket histories).
+"""
+
+from __future__ import annotations
+
+import threading
+
+__all__ = [
+    "ShapeBucketer",
+    "batch_pad",
+    "compile_cache_stats",
+    "issued_shapes",
+    "node_pad",
+    "record_compile",
+    "reset",
+    "start_pad",
+]
+
+#: pads are always multiples of this (vector-lane friendly; matches the
+#: pre-bucketing ladders so small-cluster shapes are unchanged).
+ALIGN = 8
+
+#: largest exact-multiple-of-ALIGN rung; geometric growth above.  Chosen
+#: to coincide with ``reliability._AUTO_EXACT_LIMIT`` — below it shapes
+#: are small enough that per-8 compiles are cheap and memory is noise.
+GEOMETRIC_FROM = 64
+
+#: per-rung growth factor above GEOMETRIC_FROM (each rung costs at most
+#: ~25% padding waste, and a cluster doubling in size crosses ~3 rungs).
+GROWTH = 1.25
+
+#: a held pad is kept while it is at most this factor above the natural
+#: rung for the requested size — i.e. a cluster must shrink below about
+#: half the held pad before the bucketer lets the shape shrink.
+SHRINK_BAND = 2.0
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def rung(n: int) -> int:
+    """Smallest ladder pad >= ``n`` (multiples of 8, then geometric)."""
+    n = max(1, int(n))
+    if n <= GEOMETRIC_FROM:
+        return max(ALIGN, _round_up(n, ALIGN))
+    r = GEOMETRIC_FROM
+    while r < n:
+        r = _round_up(int(r * GROWTH), ALIGN)
+    return r
+
+
+def pow2(n: int) -> int:
+    """Smallest power of two >= ``n`` (batch axes; inherently geometric)."""
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+class ShapeBucketer:
+    """Hysteresis-banded pad planner with a compile-cache census.
+
+    One instance (the module-level default) is shared by every kernel in
+    the process so that e.g. the SC and LB kernels agree on the node pad
+    for the same cluster.  Thread-safe: the simulator and checkpoint
+    plane may place from different threads.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        #: kind -> last pad issued (the hysteresis memory).
+        self._held: dict[str, int] = {}
+        #: kernel name -> set of static signatures seen (== XLA compiles).
+        self._compiled: dict[str, set[tuple]] = {}
+        #: kernel name -> total batch calls recorded.
+        self._calls: dict[str, int] = {}
+        self.queries = 0
+        self.band_hits = 0
+
+    # -- pad planning -------------------------------------------------------
+
+    def bucket(self, kind: str, n: int) -> int:
+        """Banded pad for axis ``kind``: the natural rung, unless the
+        previously issued pad still covers ``n`` within the band."""
+        natural = rung(n)
+        with self._lock:
+            self.queries += 1
+            held = self._held.get(kind)
+            if held is not None and n <= held and held <= natural * SHRINK_BAND:
+                self.band_hits += 1
+                return held
+            self._held[kind] = natural
+            return natural
+
+    # -- compile census -----------------------------------------------------
+
+    def record_compile(self, kernel: str, signature: tuple) -> bool:
+        """Note one batch call's static signature; True if it is new
+        (i.e. this call pays an XLA compile)."""
+        with self._lock:
+            seen = self._compiled.setdefault(kernel, set())
+            self._calls[kernel] = self._calls.get(kernel, 0) + 1
+            if signature in seen:
+                return False
+            seen.add(signature)
+            return True
+
+    def issued_shapes(self, kernel: str) -> frozenset:
+        with self._lock:
+            return frozenset(self._compiled.get(kernel, ()))
+
+    def stats(self) -> dict:
+        """Telemetry snapshot: per-kernel compile/call counts plus the
+        bucketer's own query/band counters."""
+        with self._lock:
+            return {
+                "queries": self.queries,
+                "band_hits": self.band_hits,
+                "kernels": {
+                    k: {"compiles": len(v), "calls": self._calls.get(k, 0)}
+                    for k, v in sorted(self._compiled.items())
+                },
+            }
+
+    def reset(self) -> None:
+        """Forget held pads and the census (tests; the jit caches of the
+        kernels themselves are unaffected)."""
+        with self._lock:
+            self._held.clear()
+            self._compiled.clear()
+            self._calls.clear()
+            self.queries = 0
+            self.band_hits = 0
+
+
+#: process-wide default bucketer shared by all kernels.
+DEFAULT = ShapeBucketer()
+
+
+def node_pad(L: int) -> int:
+    """Padded node-axis length for ``L`` live nodes (shared by every
+    kernel so one cluster size maps to one compiled extent)."""
+    return DEFAULT.bucket("nodes", L)
+
+
+def batch_pad(B: int) -> int:
+    """Padded batch-axis length (power of two; at most 2x waste and at
+    most log2(MAX_SCORING_GROUP) distinct shapes)."""
+    return pow2(B)
+
+
+def start_pad(s: int) -> int:
+    """Padded start-axis length for the SC kernel's window starts."""
+    return DEFAULT.bucket("sc_starts", s)
+
+
+def record_compile(kernel: str, signature: tuple) -> bool:
+    return DEFAULT.record_compile(kernel, signature)
+
+
+def issued_shapes(kernel: str) -> frozenset:
+    return DEFAULT.issued_shapes(kernel)
+
+
+def compile_cache_stats() -> dict:
+    return DEFAULT.stats()
+
+
+def reset() -> None:
+    DEFAULT.reset()

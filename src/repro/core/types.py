@@ -233,3 +233,10 @@ class Decision:
     # Diagnostics for benchmarks / EXPERIMENTS.md:
     candidates_considered: int = 0
     reason: str = ""
+    #: dependency window for batched rescoring: the node ids whose free
+    #: space this decision's score depended on, or ``None`` when the
+    #: score depends on cluster-global state (the conservative default —
+    #: any commit invalidates it).  Only meaningful from schedulers that
+    #: declare the ``windowed_scoring`` capability; consumed by
+    #: ``PlacementEngine._place_many_batched``.
+    window: Optional[tuple[int, ...]] = None

@@ -134,7 +134,7 @@ class TestLikeForLike:
 
     def test_ungated_benchmarks_are_ignored(self, dirs):
         fresh, base = dirs
-        failures, notes = gate.check_against(fresh, base, ["fig12", "fig6"])
+        failures, notes = gate.check_against(fresh, base, ["fig6", "fig8"])
         assert failures == [] and notes == []
 
     def test_differing_benchmark_parameters_are_skipped(self, dirs):
@@ -171,24 +171,87 @@ class TestLikeForLike:
         assert any("no baseline" in n for n in notes)
 
 
+def fig12_payload(retained: float, *, smoke=True, schema=SCHEMA_VERSION):
+    return {
+        "0.9": {
+            "drex_sc": {"2": retained, "5": retained},
+            "drex_lb": {"2": 1.0, "5": 1.0},
+            "ec(3,2)": {"2": 1.0, "5": 0.5},
+        },
+        "repair_bw_sweep": {
+            "drex_sc": {
+                "inf": {"retained_fraction": 1.0},
+                "0.01": {"retained_fraction": 0.25},
+            },
+        },
+        "meta": {"schema_version": schema, "git_sha": "abc123", "smoke": smoke},
+    }
+
+
+class TestEqualityGating:
+    """fig12's deterministic retained fractions gate on exact equality:
+    the numbers are seeded-simulation outputs, so any drift means the
+    placement/repair behavior changed — not the machine."""
+
+    def test_identical_values_pass(self, dirs):
+        fresh, base = dirs
+        write(fresh, "fig12", fig12_payload(0.75))
+        write(base, "fig12", fig12_payload(0.75))
+        failures, _ = gate.check_against(fresh, base, ["fig12"])
+        assert failures == []
+
+    def test_any_drift_fails_regardless_of_threshold(self, dirs):
+        fresh, base = dirs
+        write(fresh, "fig12", fig12_payload(0.7500001))  # way inside 20%
+        write(base, "fig12", fig12_payload(0.75))
+        failures, _ = gate.check_against(fresh, base, ["fig12"])
+        assert len(failures) == 2  # both drex_sc cells drifted
+        assert all("deterministic metric drifted" in f for f in failures)
+
+    def test_drift_in_either_direction_fails(self, dirs):
+        fresh, base = dirs
+        write(fresh, "fig12", fig12_payload(0.80))  # "improvement" drifts too
+        write(base, "fig12", fig12_payload(0.75))
+        failures, _ = gate.check_against(fresh, base, ["fig12"])
+        assert len(failures) == 2
+
+    def test_dotted_rt_keys_resolve_via_tuple_paths(self, dirs):
+        # "0.9" is one JSON key; the tuple-path form must not split it.
+        fresh, base = dirs
+        write(fresh, "fig12", fig12_payload(0.75))
+        write(base, "fig12", fig12_payload(0.75))
+        _, notes = gate.check_against(fresh, base, ["fig12"])
+        assert not any("absent" in n for n in notes)
+
+    def test_smoke_mismatch_skips_equality_metrics_too(self, dirs):
+        fresh, base = dirs
+        write(fresh, "fig12", fig12_payload(0.1, smoke=True))
+        write(base, "fig12", fig12_payload(0.9, smoke=False))
+        failures, notes = gate.check_against(fresh, base, ["fig12"])
+        assert failures == []
+        assert any("smoke-mode mismatch" in n for n in notes)
+
+
 class TestGateConfig:
-    def test_gated_metrics_exist_in_committed_smoke_baselines(self):
-        # The gate config must stay in lockstep with what table2 emits —
-        # a renamed metric would silently turn the gate into a no-op.
+    @pytest.mark.parametrize("name", sorted(gate.GATE_METRICS))
+    def test_gated_metrics_exist_in_committed_smoke_baselines(self, name):
+        # The gate config must stay in lockstep with what the benchmarks
+        # emit — a renamed metric would silently turn the gate into a
+        # no-op.
         import pathlib
 
-        baseline = pathlib.Path("results/benchmarks/smoke/table2.json")
+        baseline = pathlib.Path(f"results/benchmarks/smoke/{name}.json")
         if not baseline.exists():
             pytest.skip("no committed smoke baselines in this checkout")
         data = json.loads(baseline.read_text())
         assert data.get("meta", {}).get("smoke") is True
-        for dotted, direction in gate.GATE_METRICS["table2"]:
-            assert direction in ("higher", "lower")
+        for path, direction in gate.GATE_METRICS[name]:
+            assert direction in ("higher", "lower", "equal")
             node = data
-            for key in dotted.split("."):
+            for key in gate._path_keys(path):
                 assert isinstance(node, dict) and key in node, (
-                    f"gated metric {dotted!r} missing from the committed "
-                    f"smoke baseline"
+                    f"gated metric {gate._path_str(path)!r} missing from "
+                    f"the committed smoke baseline"
                 )
                 node = node[key]
             assert isinstance(node, (int, float))

@@ -9,7 +9,10 @@ from repro.core import (
     BatchContext,
     ClusterView,
     DataItem,
+    Decision,
+    Placement,
     PlacementEngine,
+    register_scheduler,
     SCHEDULER_NAMES,
     Scheduler,
     batch_stats,
@@ -405,7 +408,10 @@ class TestBatchStaleness:
         items = [DataItem(i, 900.0, float(i), 365.0, 0.9) for i in range(12)]
         return nodes, items
 
-    @pytest.mark.parametrize("name", ["drex_sc", "drex_lb", "greedy_least_used"])
+    @pytest.mark.parametrize(
+        "name",
+        ["drex_sc", "drex_lb", "greedy_least_used", "greedy_min_storage"],
+    )
     def test_batch_that_fills_a_node_matches_sequential(self, name):
         nodes, items = self._filling_setup()
         seq = PlacementEngine(ClusterView.from_nodes(nodes), name)
@@ -470,6 +476,178 @@ class TestBatchStaleness:
         eng = PlacementEngine(ClusterView.from_nodes(nodes), "drex_sc")
         records = eng.place_many(items)
         assert eng.stats["overhead_s"] >= sum(r.overhead_s for r in records) - 1e-9
+
+
+@register_scheduler(
+    "test_pair_windowed", batch_scoring=True, windowed_scoring=True
+)
+class _PairWindowedScheduler(Scheduler):
+    """Window-local test scheduler: item i maps replica-style (K=1, P=1)
+    onto the fixed node pair ``(2i, 2i+1) mod n`` — the decision is a
+    pure function of that pair's free space (plus its static failure
+    probabilities), so ``window`` is exactly the pair and reuse across
+    disjoint commits is provably exact.  Registered for real so the
+    registry-driven invariant suite sweeps it like any scheduler."""
+
+    name = "test_pair_windowed"
+
+    def _decide(self, item, cluster, ctx=None) -> Decision:
+        n = cluster.n_nodes
+        a, b = (2 * item.item_id) % n, (2 * item.item_id + 1) % n
+        if a == b or not (cluster.alive[a] and cluster.alive[b]):
+            return Decision(None, 1, "pair unavailable")
+        chunk = item.size_mb  # K = 1
+        if cluster.free_mb[a] < chunk or cluster.free_mb[b] < chunk:
+            return Decision(None, 1, "pair full")
+        fp = self._fail_probs(cluster, item, ctx)[[a, b]]
+        mp = self._min_parity(fp, item.reliability_target, ctx)
+        if mp < 0 or mp > 1:
+            return Decision(None, 1, "pair cannot meet reliability target")
+        ids = (int(a), int(b))
+        return Decision(
+            Placement(k=1, p=1, node_ids=ids), 1, "", window=ids
+        )
+
+    def place(self, item, cluster, ctx=None) -> Decision:
+        self.observe_item(item)
+        return self._decide(item, cluster, ctx)
+
+    def place_batch(self, items, cluster, ctx=None):
+        return [self._decide(it, cluster, ctx) for it in items]
+
+
+class TestDependencyAwareRescoring:
+    """Windowed-scoring schedulers keep batched scores across commits
+    that are provably independent of them — and *only* those: a score
+    whose window intersects a committed mapping, or that was computed
+    before the free-desc order changed, is always re-scored."""
+
+    def _spy(self, eng):
+        calls = []
+        orig = eng.scheduler.place_batch
+
+        def spy(items, cluster, ctx=None):
+            calls.append(len(items))
+            return orig(items, cluster, ctx=ctx)
+
+        eng.scheduler.place_batch = spy
+        return calls
+
+    def _nodes(self, n=12, cap=25_000.0, step=1_000.0):
+        # Huge free-space gaps: small commits cannot reorder the
+        # free-desc sort, so the order-unchanged condition holds.
+        return [
+            StorageNode(i, cap - step * i, 100.0, 100.0, 0.01)
+            for i in range(n)
+        ]
+
+    def test_disjoint_windows_survive_commits_in_one_scoring_call(self):
+        items = [DataItem(i, 10.0, float(i), 365.0, 0.9) for i in range(6)]
+        seq = PlacementEngine(
+            ClusterView.from_nodes(self._nodes()), "test_pair_windowed"
+        )
+        want = [seq.place(it).placement for it in items]
+        bat = PlacementEngine(
+            ClusterView.from_nodes(self._nodes()), "test_pair_windowed"
+        )
+        calls = self._spy(bat)
+        got = [r.placement for r in bat.place_many(items)]
+        assert got == want and all(pl is not None for pl in got)
+        # every window disjoint + order stable -> one vectorized call
+        # scored the whole batch despite 6 commits.
+        assert calls == [6]
+        np.testing.assert_array_equal(seq.cluster.used_mb, bat.cluster.used_mb)
+
+    def test_intersecting_window_is_never_reused(self):
+        # Items 0 and 6 share the pair (0, 1) on a 12-node cluster; the
+        # cluster only has room for one of them there, so reusing item
+        # 6's pre-commit score would commit onto full nodes (the
+        # engine's validator would raise).
+        nodes = self._nodes()
+        nodes[0] = StorageNode(0, 10_000.0, 100.0, 100.0, 0.01, used_mb=9_989.0)
+        nodes[1] = StorageNode(1, 9_000.0, 100.0, 100.0, 0.01, used_mb=8_989.0)
+        items = [
+            DataItem(0, 10.0, 0.0, 365.0, 0.9),
+            DataItem(3, 10.0, 1.0, 365.0, 0.9),   # disjoint pair (6, 7)
+            DataItem(6, 10.0, 2.0, 365.0, 0.9),   # pair (0, 1) again
+        ]
+        seq = PlacementEngine(ClusterView.from_nodes(nodes), "test_pair_windowed")
+        want = [seq.place(it) for it in items]
+        assert want[0].ok and not want[2].ok  # the conflict is real
+        bat = PlacementEngine(ClusterView.from_nodes(nodes), "test_pair_windowed")
+        calls = self._spy(bat)
+        got = bat.place_many(items)
+        assert [r.placement for r in got] == [r.placement for r in want]
+        assert len(calls) >= 2  # item 6 was re-scored post-commit
+        np.testing.assert_array_equal(seq.cluster.used_mb, bat.cluster.used_mb)
+
+    def test_order_change_invalidates_disjoint_windows(self):
+        # Items large enough to flip the free-desc order: even disjoint
+        # windows must be re-scored (windowed scores are defined
+        # relative to the sort order).
+        items = [DataItem(i, 2_500.0, float(i), 365.0, 0.9) for i in range(4)]
+        nodes = self._nodes(cap=20_000.0, step=100.0)
+        seq = PlacementEngine(ClusterView.from_nodes(nodes), "test_pair_windowed")
+        want = [seq.place(it).placement for it in items]
+        bat = PlacementEngine(ClusterView.from_nodes(nodes), "test_pair_windowed")
+        calls = self._spy(bat)
+        got = [r.placement for r in bat.place_many(items)]
+        assert got == want
+        assert len(calls) >= 2  # the first commit reordered free space
+
+    def test_windowless_decisions_always_rescore(self):
+        # A windowed-capability scheduler may still emit window=None
+        # decisions (e.g. rejections); a commit must invalidate those.
+        eng = PlacementEngine(
+            ClusterView.from_nodes(self._nodes()), "test_pair_windowed"
+        )
+        orig = eng.scheduler.place_batch
+        eng.scheduler.place_batch = lambda its, cluster, ctx=None: [
+            dataclasses_replace_no_window(d) for d in orig(its, cluster, ctx=ctx)
+        ]
+        calls = []
+        inner = eng.scheduler.place_batch
+
+        def spy(items, cluster, ctx=None):
+            calls.append(len(items))
+            return inner(items, cluster, ctx=ctx)
+
+        eng.scheduler.place_batch = spy
+        items = [DataItem(i, 10.0, float(i), 365.0, 0.9) for i in range(4)]
+        records = eng.place_many(items)
+        assert all(r.ok for r in records)
+        assert len(calls) >= 4  # every commit forced a fresh scoring call
+
+    def test_conservative_schedulers_unchanged_by_the_machinery(self):
+        # drex_lb declares batch_scoring but NOT windowed_scoring (f_avg
+        # is cluster-global): its batched path must still rescore after
+        # every commit and stay bit-identical to sequential place.
+        assert not get_spec("drex_lb").capabilities.windowed_scoring
+        items = [DataItem(i, 700.0, float(i), 365.0, 0.9) for i in range(8)]
+        nodes = self._nodes(n=8, cap=4_000.0, step=300.0)
+        seq = PlacementEngine(ClusterView.from_nodes(nodes), "drex_lb")
+        want = [seq.place(it).placement for it in items]
+        bat = PlacementEngine(ClusterView.from_nodes(nodes), "drex_lb")
+        got = [r.placement for r in bat.place_many(items)]
+        assert got == want
+        np.testing.assert_array_equal(seq.cluster.used_mb, bat.cluster.used_mb)
+
+    def test_least_used_declares_windowed_scoring(self):
+        # The one built-in whose decisions are provably window-local
+        # (the scanned prefix IS the mapping; see the class docstring).
+        assert get_spec("greedy_least_used").capabilities.windowed_scoring
+        cluster = ClusterView.from_nodes(self._nodes())
+        rec = create_scheduler("greedy_least_used").place_batch(
+            [DataItem(0, 10.0, 0.0, 365.0, 0.9)], cluster
+        )[0]
+        assert rec.placement is not None
+        assert rec.window == rec.placement.node_ids
+
+
+def dataclasses_replace_no_window(d: Decision) -> Decision:
+    import dataclasses
+
+    return dataclasses.replace(d, window=None)
 
 
 class TestParityFrontierKernel:

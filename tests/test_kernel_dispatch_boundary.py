@@ -18,7 +18,7 @@ import numpy as np
 import pytest
 
 from repro.core import ClusterView, DataItem, StorageNode, create_scheduler
-from repro.core import greedy_kernel, sc_kernel
+from repro.core import greedy_kernel, lb_kernel, sc_kernel
 
 needs_jax = pytest.mark.skipif(
     not (sc_kernel.kernel_available() and greedy_kernel.kernel_available()),
@@ -27,10 +27,14 @@ needs_jax = pytest.mark.skipif(
 
 #: (scheduler, boundary override or None for the class default,
 #:  kernel module, batch entry point the spy wraps)
+#: drex_lb also runs overridden: its class default (~the measured 200+
+#: node crossover against its vectorized-numpy oracle) would make the
+#: parametrized cluster sizes slow for a boundary check.
 CASES = [
     ("drex_sc", None, sc_kernel, "score_windows_batch"),
     ("greedy_min_storage", None, greedy_kernel, "min_storage_batch"),
     ("greedy_least_used", 12, greedy_kernel, "least_used_batch"),
+    ("drex_lb", 16, lb_kernel, "lb_batch"),
 ]
 
 

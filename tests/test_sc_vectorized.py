@@ -210,7 +210,9 @@ class TestKernelOracleEquivalence:
 
     def test_registry_declares_batch_scoring_capability(self):
         assert get_spec("drex_sc").capabilities.batch_scoring
-        assert not get_spec("drex_lb").capabilities.batch_scoring
+        # every hot-path adaptive scheduler is on the batched kernel
+        # path as of the LB kernel (tests/test_lb_vectorized.py)
+        assert get_spec("drex_lb").capabilities.batch_scoring
 
     def test_place_batch_is_pure(self):
         # Scoring a batch must not mutate scheduler state or the cluster.
