@@ -1,11 +1,12 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify test test-fast smoke-bench bench-check bench-baseline
+.PHONY: verify test test-fast smoke-bench bench-check bench-baseline bench-serve
 
 ## Tier-1 gate: full test suite + smoke runs of the scheduling-overhead
-## benchmark (batched place_many end to end) and the Fig. 12 failure
-## benchmark (event-driven failure/repair path incl. finite repair bw).
+## benchmark (batched place_many end to end), the Fig. 12 failure
+## benchmark (event-driven failure/repair path incl. finite repair bw)
+## and the sustained-load placement-service lane (serve_load).
 verify: test smoke-bench
 
 test:
@@ -20,16 +21,24 @@ test-fast:
 ## Smoke sweeps write to a gitignored scratch directory so `make verify`
 ## never clobbers the committed full-sweep JSON in results/benchmarks/.
 smoke-bench:
-	$(PYTHON) -m benchmarks.run --only table2,fig12 --smoke \
+	$(PYTHON) -m benchmarks.run --only table2,fig12,serve_load --smoke \
 		--out results/benchmarks/ci-smoke
+
+## Fast lane for the streaming placement service alone: the open-loop
+## Poisson sustained-load sweep (goodput, p50/p99 decision latency,
+## queue depth, reject rate) gated against its committed smoke baseline.
+bench-serve:
+	$(PYTHON) -m benchmarks.run --only serve_load --smoke \
+		--out results/benchmarks/ci-smoke \
+		--check-against results/benchmarks/smoke
 
 ## Benchmark-regression gate: run the CI-sized sweeps into the scratch
 ## directory and fail if any gated decision-cost metric regressed >20%
 ## against the committed smoke baselines (results/benchmarks/smoke/).
 ## Regenerate baselines with:
-##   $(PYTHON) -m benchmarks.run --only table2,fig12 --smoke --out results/benchmarks/smoke
+##   $(PYTHON) -m benchmarks.run --only table2,fig12,serve_load --smoke --out results/benchmarks/smoke
 bench-check:
-	$(PYTHON) -m benchmarks.run --only table2,fig12 --smoke \
+	$(PYTHON) -m benchmarks.run --only table2,fig12,serve_load --smoke \
 		--out results/benchmarks/ci-smoke \
 		--check-against results/benchmarks/smoke
 
@@ -40,5 +49,5 @@ bench-check:
 ## then review and commit the JSON diff.  Full workflow:
 ## benchmarks/README.md.
 bench-baseline:
-	$(PYTHON) -m benchmarks.run --only table2,fig12 --smoke \
+	$(PYTHON) -m benchmarks.run --only table2,fig12,serve_load --smoke \
 		--out results/benchmarks/smoke

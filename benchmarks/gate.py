@@ -85,6 +85,26 @@ GATE_METRICS: dict[str, tuple[tuple, ...]] = {
         (("repair_bw_sweep", "drex_sc", "inf", "retained_fraction"), "equal"),
         (("repair_bw_sweep", "drex_sc", "0.01", "retained_fraction"), "equal"),
     ),
+    # Streaming placement service (benchmarks/serve_load.py).  Virtual
+    # quantities — placement digests, goodput on the virtual clock,
+    # reject counts, oracle equality — are deterministic by the
+    # frontier's replay contract and equality-gated.  The wall-clock
+    # speedup/latency ratios over the naive per-item baseline are
+    # min-of-reps timed and ratio-gated like table2's.  rate_60 runs
+    # reject-free; rate_1500 overloads the bounded queue so its reject
+    # count pins the backpressure path.
+    "serve_load": (
+        ("drex_sc.rate_60.placements_digest", "equal"),
+        ("drex_sc.rate_60.goodput_virtual_items_per_s", "equal"),
+        ("drex_sc.rate_60.matches_sequential", "equal"),
+        ("drex_sc.rate_1500.placements_digest", "equal"),
+        ("drex_sc.rate_1500.reject_count", "equal"),
+        ("drex_sc.churn.placements_digest", "equal"),
+        ("greedy_least_used.rate_60.placements_digest", "equal"),
+        ("greedy_least_used.rate_1500.reject_count", "equal"),
+        ("drex_sc.rate_60.speedup_vs_sequential", "higher"),
+        ("drex_sc.rate_60.p99_latency_ratio", "higher"),
+    ),
 }
 
 

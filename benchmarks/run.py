@@ -39,6 +39,7 @@ from . import (
     fig12_failures,
     fig13_e2e_checkpoint,
     gate,
+    serve_load,
     table2_overhead,
 )
 from . import common
@@ -55,6 +56,7 @@ BENCHES = {
     "fig11": fig11_throughput_datasets.run,
     "fig12": fig12_failures.run,
     "fig13": fig13_e2e_checkpoint.run,
+    "serve_load": serve_load.run,
 }
 
 
@@ -75,6 +77,10 @@ SMOKE_KWARGS = {
         sweep_algos=("drex_sc", "ec(3,2)"),
         algos=("drex_sc", "drex_lb", "ec(3,2)"),
     ),
+    # Sustained-load placement-service lane: one reject-free rate (oracle
+    # checked against the sequential baseline) and one overload rate
+    # (deterministic backpressure), kept small enough for the PR lane.
+    "serve_load": dict(n_items=240, rates=(60.0, 1500.0), reps=2),
 }
 
 

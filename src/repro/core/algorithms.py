@@ -26,6 +26,7 @@ from typing import Optional, Sequence
 import numpy as np
 
 from . import greedy_kernel, lb_kernel, sc_kernel
+from .incremental import FreeOrderTracker, SaturationTracker
 from .registry import (
     create_scheduler,
     get_spec,
@@ -536,6 +537,18 @@ class DRexLB(_KernelSchedulerMixin, Scheduler):
     free space over *all* live nodes — so any commit anywhere shifts
     every pending penalty and batched scores can never outlive a commit
     (the engine's dependency-aware rescoring correctly invalidates them).
+
+    **Incremental rescoring under commit-heavy load**: the exactness
+    policy pins ``f_avg`` to numpy's pairwise mean over the free-desc
+    order, so the mean itself must be re-reduced after every commit —
+    but the *order* usually survives (a commit moves a few nodes down a
+    little), and with the order the O(L log L) argsort, the frontier
+    cache keys and the DP reuse all survive too.  A
+    :class:`~repro.core.incremental.FreeOrderTracker` fed by the
+    engine's ``observe_commit`` hook keeps the order across commit
+    deltas with an O(p) adjacency check, leaving ``f_avg``/dev/suffix as
+    O(L) re-reductions over the same element order (bitwise identical to
+    the from-scratch path).
     """
 
     name = "drex_lb"
@@ -548,6 +561,22 @@ class DRexLB(_KernelSchedulerMixin, Scheduler):
     #: use the kernel regardless (6-10x at 100-500 nodes).  Set to 0 to
     #: force the kernel (tests do).
     KERNEL_MIN_NODES = 256
+
+    def __init__(self):
+        #: incremental free-desc order across commit deltas; set to None
+        #: to force the from-scratch argsort (the exactness tests compare
+        #: both).
+        self._order_tracker: Optional[FreeOrderTracker] = FreeOrderTracker()
+
+    def observe_commit(self, node_ids, chunk_mb: float, cluster: ClusterView) -> None:
+        """Engine commit hook (see ``PlacementEngine._finalize``)."""
+        if self._order_tracker is not None:
+            self._order_tracker.observe_commit(node_ids, chunk_mb, cluster)
+
+    def _by_free(self, cluster: ClusterView) -> np.ndarray:
+        if self._order_tracker is None:
+            return self._live_sorted(cluster, cluster.free_mb)
+        return self._order_tracker.order(cluster)
 
     @staticmethod
     def _considered(L: int, p_found: int | None) -> int:
@@ -562,7 +591,7 @@ class DRexLB(_KernelSchedulerMixin, Scheduler):
     def _place_scalar(
         self, item: DataItem, cluster: ClusterView, ctx=None
     ) -> Decision:
-        by_free = self._live_sorted(cluster, cluster.free_mb)
+        by_free = self._by_free(cluster)
         L = len(by_free)
         if L < 3:  # Alg. 1 needs K>=2 and P>=1
             return Decision(None, 0, "fewer than 3 live nodes")
@@ -628,7 +657,7 @@ class DRexLB(_KernelSchedulerMixin, Scheduler):
     def _place_kernel(
         self, items: list[DataItem], cluster: ClusterView, ctx
     ) -> list[Decision]:
-        by_free = self._live_sorted(cluster, cluster.free_mb)
+        by_free = self._by_free(cluster)
         L = len(by_free)
         if L < 3:
             return [Decision(None, 0, "fewer than 3 live nodes") for _ in items]
@@ -737,6 +766,18 @@ class DRexSC(Scheduler):
     (``KERNEL_MIN_NODES``; batches of >= 4 items always use it); set
     ``use_kernel = False`` to force the oracle.  Decisions are
     equivalent by construction and pinned by tests/test_sc_vectorized.py.
+
+    **Partial rescoring after commits**: the saturation *baseline*
+    (Alg. 2 line 11's sum over every live node) changes after a commit
+    only at the committed nodes, so a
+    :class:`~repro.core.incremental.SaturationTracker` fed by the
+    engine's ``observe_commit`` hook refreshes just those entries
+    instead of re-evaluating the exponential over the whole cluster;
+    a :class:`~repro.core.incremental.FreeOrderTracker` likewise keeps
+    the free-desc order (and with it the per-start frontier cache keys)
+    across commits.  Both reproduce the from-scratch values bitwise (see
+    the incremental module docstring); the per-candidate window grid is
+    always scored fresh.
     """
 
     name = "drex_sc"
@@ -754,6 +795,34 @@ class DRexSC(Scheduler):
 
     def __init__(self, time_model: ECTimeModel | None = None):
         self.time_model = time_model or ECTimeModel()
+        #: incremental rescoring state (None disables; exactness tests
+        #: compare both paths).
+        self._order_tracker: Optional[FreeOrderTracker] = FreeOrderTracker()
+        self._sat_tracker: Optional[SaturationTracker] = SaturationTracker()
+
+    def observe_commit(self, node_ids, chunk_mb: float, cluster: ClusterView) -> None:
+        """Engine commit hook (see ``PlacementEngine._finalize``)."""
+        if self._order_tracker is not None:
+            self._order_tracker.observe_commit(node_ids, chunk_mb, cluster)
+        if self._sat_tracker is not None:
+            self._sat_tracker.observe_commit(node_ids, chunk_mb, cluster)
+
+    def _by_free(self, cluster: ClusterView) -> np.ndarray:
+        if self._order_tracker is None:
+            return self._live_sorted(cluster, cluster.free_mb)
+        return self._order_tracker.order(cluster)
+
+    def _f_base_sum(
+        self, cluster: ClusterView, smin: float, live: np.ndarray, L: int
+    ) -> float:
+        """Alg. 2 line 11's baseline sum; tracker-served when possible."""
+        if self._sat_tracker is None:
+            return float(
+                saturation_score(
+                    cluster.used_mb[live], cluster.capacity_mb[live], smin, L
+                ).sum()
+            )
+        return self._sat_tracker.f_base_sum(cluster, smin)
 
     def _kernel_wins(self, cluster: ClusterView, batch: int) -> bool:
         return _kernel_dispatch(
@@ -815,7 +884,7 @@ class DRexSC(Scheduler):
         cluster: ClusterView,
         ctx,
     ) -> list[Decision]:
-        by_free = self._live_sorted(cluster, cluster.free_mb)  # line 1
+        by_free = self._by_free(cluster)  # line 1
         L = len(by_free)
         if L < 2:
             return [Decision(None, 0, "fewer than 2 live nodes") for _ in items]
@@ -833,9 +902,7 @@ class DRexSC(Scheduler):
         for row, smin in enumerate(smins):
             got = base_cache.get(smin)
             if got is None:
-                f_base_sum = float(
-                    saturation_score(used[live], cap[live], smin, L).sum()
-                )
+                f_base_sum = self._f_base_sum(cluster, smin, live, L)
                 sys_sat = float(
                     saturation_score(
                         np.array([used[live].sum()]),
@@ -892,7 +959,7 @@ class DRexSC(Scheduler):
     def _place_scalar(
         self, item: DataItem, cluster: ClusterView, ctx=None
     ) -> Decision:
-        by_free = self._live_sorted(cluster, cluster.free_mb)  # line 1
+        by_free = self._by_free(cluster)  # line 1
         L = len(by_free)
         if L < 2:
             return Decision(None, 0, "fewer than 2 live nodes")
@@ -915,8 +982,7 @@ class DRexSC(Scheduler):
         # balance penalty — unmapped nodes still participate and wide,
         # shallow placements are rewarded for not pushing any node toward
         # its limit.
-        f_base = saturation_score(used[live], cap[live], smin, L)
-        f_base_sum = float(f_base.sum())
+        f_base_sum = self._f_base_sum(cluster, smin, live, L)
         tm = self.time_model
 
         # Candidate windows as parallel arrays ((s, n) identifies the

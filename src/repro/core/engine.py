@@ -217,6 +217,16 @@ class PlacementEngine:
             )
         except (TypeError, ValueError):  # builtins / C callables
             self._pass_ctx = False
+        # Commit-delta hook: schedulers maintaining incremental rescoring
+        # state (see repro.core.incremental) get every commit replayed;
+        # out-of-band mutations are caught by the trackers' own mirror
+        # validation, so the hook is an optimization, never a soundness
+        # requirement.
+        self._observe_commit = getattr(scheduler, "observe_commit", None)
+        #: monotonic counter of state mutations made *through the engine*
+        #: (commits, repairs, releases, rollbacks); snapshot epochs stamp
+        #: it so readers can order views without comparing arrays.
+        self.mutation_seq = 0
         self._repair_planner = RepairPlanner(self.cluster)
         self.stats = {
             "n_placed": 0,
@@ -259,6 +269,9 @@ class PlacementEngine:
         committed = False
         if self.auto_commit:
             self.cluster.commit(pl, chunk)
+            self.mutation_seq += 1
+            if self._observe_commit is not None:
+                self._observe_commit(pl.node_ids, chunk, self.cluster)
             self.stats["mb_committed"] += chunk * pl.n
             committed = True
         self.stats["n_placed"] += 1
@@ -489,6 +502,7 @@ class PlacementEngine:
         commit = self.auto_commit if commit is None else commit
         if commit and plan.new_nodes:
             self.cluster.used_mb[np.asarray(plan.new_nodes)] += plan.chunk_mb
+            self.mutation_seq += 1
             self.stats["repair_mb_committed"] += plan.repair_mb
             plan = dataclasses.replace(plan, committed=True)
         return plan
@@ -505,9 +519,26 @@ class PlacementEngine:
             alive = [n for n in plan.new_nodes if self.cluster.alive[n]]
             if alive:
                 self.cluster.release(alive, plan.chunk_mb)
+            self.mutation_seq += 1
             self.stats["repair_mb_committed"] -= plan.repair_mb
 
     # -- commit / rollback ----------------------------------------------------
+
+    def view_snapshot(self) -> ClusterView:
+        """Deep, read-only copy of the current cluster state.
+
+        This is the mechanism behind the placement frontier's snapshot
+        epochs (:mod:`repro.serve.placement.epochs`): readers hold a
+        consistent view while placements keep mutating the live one.
+        Arrays are write-protected so a reader bug cannot corrupt a
+        published epoch."""
+        view = self.cluster.copy()
+        for arr in (
+            view.capacity_mb, view.used_mb, view.write_bw,
+            view.read_bw, view.afr, view.alive,
+        ):
+            arr.setflags(write=False)
+        return view
 
     def snapshot(self) -> tuple[np.ndarray, np.ndarray, dict, Optional[float]]:
         """Capture the mutable engine state (occupancy, liveness, stats,
@@ -527,6 +558,7 @@ class PlacementEngine:
         used, alive, stats, smin = snapshot
         self.cluster.used_mb[:] = used
         self.cluster.alive[:] = alive
+        self.mutation_seq += 1
         self.stats = dict(stats)
         if hasattr(self.scheduler, "smin_mb"):
             self.scheduler.smin_mb = smin
@@ -542,6 +574,7 @@ class PlacementEngine:
         for current occupancy."""
         if record.committed and record.placement is not None:
             self.cluster.release(record.placement.node_ids, record.chunk_mb)
+            self.mutation_seq += 1
             self.stats["mb_committed"] -= record.chunk_mb * record.placement.n
 
     # -- internal -------------------------------------------------------------

@@ -1,0 +1,236 @@
+"""Incremental commit-delta rescoring for cluster-global D-Rex terms.
+
+Both dynamic D-Rex schedulers rescore *cluster-global* quantities on
+every placement: LB re-sorts all live nodes by free space and re-averages
+them for the balance penalty's ``f_avg``; SC re-evaluates the exponential
+saturation baseline over every live node.  Under commit-heavy streaming
+load those recomputations dominate the per-decision cost, yet a commit's
+effect on the cluster is known exactly — ``used_mb[node_ids] += chunk``
+— so this module keeps per-scheduler trackers that fold commit deltas in
+instead of recomputing from scratch.
+
+**Exactness contract.**  Decisions must stay bit-identical to the
+from-scratch path (the simulator's legacy goldens and the fig12 equality
+gates pin absolute placements), which rules out changing any summation
+order.  The trackers therefore never maintain floating-point *sums*
+incrementally:
+
+* :class:`FreeOrderTracker` maintains the free-desc *sort order*.  A
+  commit only changes the free space of the touched nodes, so the cached
+  order stays valid iff each touched node is still correctly ordered
+  against its cached neighbours — an O(p) adjacency check under the same
+  total order ``Scheduler._live_sorted`` realizes (free desc, ties by
+  ascending id; sortedness of every adjacent pair under a strict total
+  order implies the unique sorted arrangement, hence equality with what
+  a fresh stable argsort would return).  When valid, the O(L log L)
+  argsort is skipped; ``f_avg`` and the deviation terms are then
+  recomputed in O(L) over the *same* element order, which is bitwise
+  what the argsort path yields.  An unchanged order also keeps the
+  permuted fail-prob sequence identical, so :class:`BatchContext`
+  frontier hits survive the commit.
+* :class:`SaturationTracker` caches D-Rex SC's per-node saturation
+  scores in live-id order and refreshes only the touched entries after a
+  commit (``saturation_score`` is elementwise, so a sliced recompute is
+  bit-equal to the full-array one); the baseline ``f_base_sum`` is then
+  the same left-to-right pairwise ``.sum()`` over the same value
+  sequence the from-scratch path reduces.
+
+**Self-healing.**  Trackers mirror ``(used_mb, alive)`` and validate the
+mirror against the live view on every query (two vectorized array
+compares); any out-of-band mutation — failures, heals, joins, repairs,
+rollbacks, ``release`` — fails validation and triggers a from-scratch
+rebuild.  The engine feeds commits through ``Scheduler.observe_commit``
+(see ``PlacementEngine._finalize``); everything else is caught by
+validation.  Exactness and reuse are pinned by
+tests/test_incremental_rescore.py.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .types import ClusterView
+
+__all__ = ["FreeOrderTracker", "SaturationTracker"]
+
+
+class _UsedMirror:
+    """Mirror of ``(used_mb, alive)`` that replays commit deltas with the
+    exact array op :meth:`ClusterView.commit` performs, so a mirror that
+    matched before a commit matches (bitwise) after it."""
+
+    def __init__(self):
+        self.used: np.ndarray | None = None
+        self.alive: np.ndarray | None = None
+
+    def capture(self, cluster: ClusterView) -> None:
+        self.used = cluster.used_mb.copy()
+        self.alive = cluster.alive.copy()
+
+    def matches(self, cluster: ClusterView) -> bool:
+        return (
+            self.used is not None
+            and self.used.shape == cluster.used_mb.shape
+            and np.array_equal(self.used, cluster.used_mb)
+            and np.array_equal(self.alive, cluster.alive)
+        )
+
+    def apply_commit(self, node_ids, chunk_mb: float) -> bool:
+        """Replay one commit; False when the mirror cannot absorb it."""
+        if self.used is None:
+            return False
+        ids = np.asarray(node_ids)
+        if ids.size == 0 or int(ids.max()) >= len(self.used):
+            return False
+        self.used[ids] += chunk_mb  # ClusterView.commit's exact op
+        return True
+
+
+class FreeOrderTracker:
+    """Maintains the free-desc live-node order across commit deltas.
+
+    :meth:`order` returns exactly what
+    ``Scheduler._live_sorted(cluster, cluster.free_mb)`` would; when the
+    cached order is provably still valid the argsort is skipped.  The
+    returned array is shared state — callers must not mutate it.
+    """
+
+    def __init__(self):
+        self._mirror = _UsedMirror()
+        self._by_free: np.ndarray | None = None
+        self._pos: np.ndarray | None = None  # node id -> position, -1 dead
+        self.hits = 0
+        self.rebuilds = 0
+
+    def invalidate(self) -> None:
+        self._by_free = None
+        self._pos = None
+        self._mirror.used = None
+
+    def order(self, cluster: ClusterView) -> np.ndarray:
+        if self._by_free is not None and self._mirror.matches(cluster):
+            self.hits += 1
+            return self._by_free
+        self.rebuilds += 1
+        ids = cluster.live_ids()
+        perm = np.argsort(-cluster.free_mb[ids], kind="stable")
+        self._by_free = ids[perm]
+        pos = np.full(cluster.n_nodes, -1, dtype=np.int64)
+        pos[self._by_free] = np.arange(len(self._by_free))
+        self._pos = pos
+        self._mirror.capture(cluster)
+        return self._by_free
+
+    def observe_commit(self, node_ids, chunk_mb: float, cluster: ClusterView) -> None:
+        """Fold one committed placement into the cached order.
+
+        The touched nodes' free space shrank; the order survives iff each
+        touched node still sorts correctly against its cached neighbours.
+        Any violation (or a commit the mirror cannot absorb) drops the
+        cache — the next query rebuilds from scratch.
+        """
+        if self._by_free is None:
+            return
+        if not self._mirror.apply_commit(node_ids, chunk_mb):
+            self.invalidate()
+            return
+        by, pos = self._by_free, self._pos
+        cap, used = cluster.capacity_mb, self._mirror.used
+
+        def before(a: int, b: int) -> bool:
+            # the _live_sorted total order: free desc, ties ascending id
+            fa, fb = cap[a] - used[a], cap[b] - used[b]
+            return fa > fb or (fa == fb and a < b)
+
+        for nid in node_ids:
+            nid = int(nid)
+            k = int(pos[nid]) if nid < len(pos) else -1
+            if (
+                k < 0
+                or (k > 0 and not before(int(by[k - 1]), nid))
+                or (k + 1 < len(by) and not before(nid, int(by[k + 1])))
+            ):
+                self.invalidate()
+                return
+
+
+class SaturationTracker:
+    """Caches D-Rex SC's per-node saturation baseline across commits.
+
+    Scores are kept per smin anchor in live-id order; a commit refreshes
+    only the touched entries (elementwise recompute over the touched
+    slice — bit-equal to the full-array evaluation), and
+    :meth:`f_base_sum` is the same ``.sum()`` over the same value
+    sequence the from-scratch path reduces.
+    """
+
+    #: distinct smin anchors kept; the anchor is a running minimum, so
+    #: more than a couple of live values means the trace is degenerate.
+    MAX_ANCHORS = 8
+
+    def __init__(self):
+        self._mirror = _UsedMirror()
+        self._live: np.ndarray | None = None
+        self._pos: np.ndarray | None = None
+        self._scores: dict[float, np.ndarray] = {}
+        self.hits = 0
+        self.rebuilds = 0
+
+    def invalidate(self) -> None:
+        self._scores.clear()
+        self._live = None
+        self._pos = None
+        self._mirror.used = None
+
+    def f_base_sum(self, cluster: ClusterView, smin: float) -> float:
+        """Saturation baseline over every live node for one smin anchor —
+        bit-equal to
+        ``float(saturation_score(used[live], cap[live], smin, L).sum())``."""
+        from .algorithms import saturation_score  # deferred: no cycle
+
+        smin = float(smin)
+        if self._live is None or not self._mirror.matches(cluster):
+            self.invalidate()
+            self._live = cluster.live_ids()
+            pos = np.full(cluster.n_nodes, -1, dtype=np.int64)
+            pos[self._live] = np.arange(len(self._live))
+            self._pos = pos
+            self._mirror.capture(cluster)
+        scores = self._scores.get(smin)
+        if scores is None:
+            self.rebuilds += 1
+            scores = saturation_score(
+                cluster.used_mb[self._live],
+                cluster.capacity_mb[self._live],
+                smin,
+                len(self._live),
+            )
+            if len(self._scores) >= self.MAX_ANCHORS:
+                self._scores.clear()
+            self._scores[smin] = scores
+        else:
+            self.hits += 1
+        return float(scores.sum())
+
+    def observe_commit(self, node_ids, chunk_mb: float, cluster: ClusterView) -> None:
+        """Refresh only the committed nodes' cached saturation scores."""
+        from .algorithms import saturation_score
+
+        if self._live is None:
+            return
+        if not self._mirror.apply_commit(node_ids, chunk_mb):
+            self.invalidate()
+            return
+        ids = np.asarray(node_ids)
+        if int(ids.max()) >= len(self._pos):
+            self.invalidate()
+            return
+        at = self._pos[ids]
+        if np.any(at < 0):  # committed to a node outside the cached live set
+            self.invalidate()
+            return
+        used = self._mirror.used[ids]
+        cap = cluster.capacity_mb[ids]
+        L = len(self._live)
+        for smin, scores in self._scores.items():
+            scores[at] = saturation_score(used, cap, smin, L)

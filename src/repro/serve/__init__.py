@@ -1,5 +1,20 @@
-"""Serving: batched prefill+decode engine."""
+"""Serving layer — two unrelated planes, namespaced apart:
+
+* :mod:`repro.serve.engine` — the batched **token**-serving engine
+  (prefill + decode loop over the model zoo);
+* :mod:`repro.serve.placement` — the streaming **placement** service
+  (admission queue, micro-batched ``place_many`` windows,
+  snapshot-epoch reads over a
+  :class:`~repro.core.engine.PlacementEngine`).
+
+``TokenServingEngine`` is the unambiguous name for the former;
+``ServingEngine`` remains as the original alias.
+"""
 
 from .engine import ServeConfig, ServingEngine
 
-__all__ = ["ServeConfig", "ServingEngine"]
+#: explicit name so call sites never conflate the token-serving engine
+#: with the storage placement service in :mod:`repro.serve.placement`.
+TokenServingEngine = ServingEngine
+
+__all__ = ["ServeConfig", "ServingEngine", "TokenServingEngine"]

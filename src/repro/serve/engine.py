@@ -1,9 +1,14 @@
-"""Batched serving engine: prefill a request batch, then step the decode
-loop with greedy or temperature sampling.
+"""Batched *token*-serving engine: prefill a request batch, then step
+the decode loop with greedy or temperature sampling.
 
 ``serve_step`` (one token for the whole batch against the KV/recurrent
 state) is the function the dry-run lowers for the decode_32k / long_500k
 shapes; the engine wraps it with the request plumbing the examples use.
+
+Namespace note: this module serves model *tokens*; the storage
+*placement* service (admission queue + micro-batched ``place_many``
+windows over a :class:`~repro.core.engine.PlacementEngine`) lives in
+:mod:`repro.serve.placement` — the two share nothing but the package.
 """
 
 from __future__ import annotations
@@ -79,19 +84,24 @@ class ServingEngine:
         tok = self._sample(logits, sub)
         out.append(tok)
         done = jnp.zeros((b,), bool)
+        if scfg.eos_id is not None:
+            done = done | (tok[:, 0] == scfg.eos_id)
+        n_tok = b  # every row emits the first token (eos itself counts)
         t0 = time.perf_counter()
         for i in range(1, scfg.max_new_tokens):
+            if bool(done.all()):
+                break
             logits, state = self._step(self.params, tok, jnp.int32(t + i - 1), state)
             key, sub = jax.random.split(key)
             tok = self._sample(logits, sub)
+            # Rows past their eos emit uncounted padding; a row's own eos
+            # token is real output and counts.
+            n_tok += int(b - int(done.sum()))
             if scfg.eos_id is not None:
                 done = done | (tok[:, 0] == scfg.eos_id)
-                if bool(done.all()):
-                    out.append(tok)
-                    break
             out.append(tok)
         self.metrics["decode_s"] += time.perf_counter() - t0
-        self.metrics["tokens_out"] += int(b * (len(out) - 1))
+        self.metrics["tokens_out"] += n_tok
         return np.asarray(jnp.concatenate(out, axis=1))
 
     @property

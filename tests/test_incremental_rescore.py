@@ -1,0 +1,204 @@
+"""Exactness + reuse pins for the incremental commit-delta rescoring
+trackers (repro.core.incremental).
+
+The contract (module docstring there): decisions with the trackers
+enabled are **bit-identical** to the from-scratch path over any mix of
+commits, failures, heals, releases and rollbacks — the trackers only
+skip recomputation they can prove redundant, and self-heal on any
+out-of-band mutation.  Each D-Rex scheduler exposes the from-scratch
+path by setting its tracker attributes to ``None``.
+
+Reuse is pinned too (``hits > 0`` after a commit-heavy run): an
+exactness-preserving tracker that never hits would be dead code.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import ClusterView, DataItem, PlacementEngine, StorageNode
+from repro.core.algorithms import DRexLB, DRexSC, saturation_score
+from repro.core.incremental import FreeOrderTracker, SaturationTracker
+from repro.storage.traces import make_trace
+
+
+def _cluster(n: int = 14, seed: int = 5, equal_caps: bool = False) -> ClusterView:
+    rng = np.random.default_rng(seed)
+    nodes = [
+        StorageNode(
+            node_id=i,
+            capacity_mb=1e6 if equal_caps else float(rng.uniform(4e5, 2e6)),
+            write_bw=float(rng.uniform(100, 250)),
+            read_bw=float(rng.uniform(100, 400)),
+            annual_failure_rate=float(rng.uniform(0.003, 0.05)),
+        )
+        for i in range(n)
+    ]
+    return ClusterView.from_nodes(nodes)
+
+
+def _items(n: int = 36, seed: int = 9):
+    return make_trace("meva", seed=seed, n_items=n)
+
+
+def _fresh(algo_cls, *, tracked: bool):
+    sched = algo_cls()
+    if not tracked:
+        sched._order_tracker = None
+        if hasattr(sched, "_sat_tracker"):
+            sched._sat_tracker = None
+    return sched
+
+
+def _drive(engine: PlacementEngine):
+    """One commit-heavy adversarial sequence: streaming placements with a
+    failure, a heal, a release, and a snapshot/rollback pair interleaved
+    — every mutation class the trackers must absorb or self-heal from."""
+    placements = []
+    released = None
+    snap = None
+    for i, item in enumerate(_items()):
+        rec = engine.place(item)
+        placements.append((rec.item_id, rec.ok, rec.placement))
+        if rec.ok and released is None and i == 8:
+            engine.release(rec)
+            released = rec.item_id
+        if i == 12:
+            engine.cluster.fail_node(3)
+        if i == 18:
+            engine.cluster.heal_node(3)
+        if i == 22:
+            snap = engine.snapshot()
+        if i == 25:
+            engine.rollback(snap)
+    return placements
+
+
+class TestBitIdenticalDecisions:
+    @pytest.mark.parametrize("algo_cls", [DRexLB, DRexSC], ids=["lb", "sc"])
+    def test_adversarial_sequence(self, algo_cls):
+        fast = _fresh(algo_cls, tracked=True)
+        slow = _fresh(algo_cls, tracked=False)
+        got = _drive(PlacementEngine(_cluster(), fast))
+        want = _drive(PlacementEngine(_cluster(), slow))
+        assert got == want
+        # reuse must actually happen, or the tracker is dead code
+        assert fast._order_tracker.hits > 0
+
+    def test_sc_saturation_reuse(self):
+        fast = _fresh(DRexSC, tracked=True)
+        _drive(PlacementEngine(_cluster(), fast))
+        assert fast._sat_tracker.hits > 0
+        assert len(fast._sat_tracker._scores) <= SaturationTracker.MAX_ANCHORS
+
+    @pytest.mark.parametrize("algo_cls", [DRexLB, DRexSC], ids=["lb", "sc"])
+    def test_equal_capacity_ties(self, algo_cls):
+        """All-equal capacities: every commit reorders near-ties, forcing
+        the adjacency check's invalidation path constantly — decisions
+        must still match the from-scratch argsort (ties break by id)."""
+        fast = _fresh(algo_cls, tracked=True)
+        slow = _fresh(algo_cls, tracked=False)
+        eng_f = PlacementEngine(_cluster(equal_caps=True), fast)
+        eng_s = PlacementEngine(_cluster(equal_caps=True), slow)
+        for item in _items(24):
+            rf, rs = eng_f.place(item), eng_s.place(item)
+            assert (rf.ok, rf.placement) == (rs.ok, rs.placement)
+
+    def test_batched_path_matches_scalar_with_trackers(self):
+        """place_many on the kernel path with trackers live == per-item
+        place with trackers disabled (the strongest end-to-end pin)."""
+        fast = _fresh(DRexSC, tracked=True)
+        slow = _fresh(DRexSC, tracked=False)
+        recs = PlacementEngine(_cluster(), fast).place_many(_items(20))
+        eng = PlacementEngine(_cluster(), slow)
+        seq = [eng.place(it) for it in _items(20)]
+        # both engines started from identical clusters; same decisions
+        assert [(r.ok, r.placement) for r in recs] == [
+            (r.ok, r.placement) for r in seq
+        ]
+
+
+class TestFreeOrderTracker:
+    def _order_oracle(self, cluster):
+        ids = cluster.live_ids()
+        return ids[np.argsort(-cluster.free_mb[ids], kind="stable")]
+
+    def test_valid_commit_keeps_cache(self):
+        cluster = _cluster(8)
+        tr = FreeOrderTracker()
+        first = tr.order(cluster)
+        assert np.array_equal(first, self._order_oracle(cluster))
+        # tiny commit to the most-free node: order provably unchanged
+        top = int(first[0])
+        margin = cluster.free_mb[top] - cluster.free_mb[int(first[1])]
+        cluster.commit(_placement([top]), float(margin) / 2)
+        tr.observe_commit([top], float(margin) / 2, cluster)
+        before = tr.rebuilds
+        again = tr.order(cluster)
+        assert tr.rebuilds == before and tr.hits >= 1
+        assert np.array_equal(again, self._order_oracle(cluster))
+
+    def test_order_flip_invalidates_and_rebuilds_correctly(self):
+        cluster = _cluster(8)
+        tr = FreeOrderTracker()
+        first = tr.order(cluster)
+        top, second = int(first[0]), int(first[1])
+        # push the top node below the runner-up: adjacency violated
+        delta = float(cluster.free_mb[top] - cluster.free_mb[second]) + 1.0
+        cluster.commit(_placement([top]), delta)
+        tr.observe_commit([top], delta, cluster)
+        rebuilt = tr.order(cluster)
+        assert np.array_equal(rebuilt, self._order_oracle(cluster))
+        assert int(rebuilt[0]) == second
+
+    def test_out_of_band_mutation_self_heals(self):
+        cluster = _cluster(8)
+        tr = FreeOrderTracker()
+        tr.order(cluster)
+        cluster.fail_node(int(cluster.live_ids()[0]))  # no observe_commit
+        healed = tr.order(cluster)  # mirror mismatch -> rebuild
+        assert np.array_equal(healed, self._order_oracle(cluster))
+        assert tr.rebuilds >= 2
+
+
+class TestSaturationTracker:
+    def _oracle(self, cluster, smin):
+        live = cluster.live_ids()
+        return float(
+            saturation_score(
+                cluster.used_mb[live], cluster.capacity_mb[live], smin, len(live)
+            ).sum()
+        )
+
+    def test_bit_equal_across_commits(self):
+        cluster = _cluster(8)
+        tr = SaturationTracker()
+        smin = 42.0
+        assert tr.f_base_sum(cluster, smin) == self._oracle(cluster, smin)
+        nodes = [0, 3, 5]
+        cluster.commit(_placement(nodes), 500.0)
+        tr.observe_commit(nodes, 500.0, cluster)
+        assert tr.f_base_sum(cluster, smin) == self._oracle(cluster, smin)
+        assert tr.hits >= 1
+
+    def test_out_of_band_mutation_self_heals(self):
+        cluster = _cluster(8)
+        tr = SaturationTracker()
+        smin = 17.0
+        tr.f_base_sum(cluster, smin)
+        cluster.used_mb[2] += 1234.0  # mutation the tracker never saw
+        assert tr.f_base_sum(cluster, smin) == self._oracle(cluster, smin)
+
+    def test_anchor_bound(self):
+        cluster = _cluster(8)
+        tr = SaturationTracker()
+        for k in range(3 * SaturationTracker.MAX_ANCHORS):
+            tr.f_base_sum(cluster, float(k + 1))
+            assert len(tr._scores) <= SaturationTracker.MAX_ANCHORS
+
+
+def _placement(node_ids):
+    """Minimal stand-in with the ``node_ids`` attribute
+    :meth:`ClusterView.commit` consumes."""
+    return dataclasses.make_dataclass("P", ["node_ids"])(list(node_ids))
