@@ -1,12 +1,13 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify test test-fast smoke-bench bench-check bench-baseline bench-serve
+.PHONY: verify test test-fast smoke-bench bench-check bench-baseline bench-serve bench-ec
 
 ## Tier-1 gate: full test suite + smoke runs of the scheduling-overhead
 ## benchmark (batched place_many end to end), the Fig. 12 failure
-## benchmark (event-driven failure/repair path incl. finite repair bw)
-## and the sustained-load placement-service lane (serve_load).
+## benchmark (event-driven failure/repair path incl. finite repair bw),
+## the sustained-load placement-service lane (serve_load), and the
+## batched-EC data plane / pipelined checkpoint lanes (fig1, fig13).
 verify: test smoke-bench
 
 test:
@@ -21,7 +22,7 @@ test-fast:
 ## Smoke sweeps write to a gitignored scratch directory so `make verify`
 ## never clobbers the committed full-sweep JSON in results/benchmarks/.
 smoke-bench:
-	$(PYTHON) -m benchmarks.run --only table2,fig12,serve_load --smoke \
+	$(PYTHON) -m benchmarks.run --only table2,fig12,serve_load,fig1,fig13 --smoke \
 		--out results/benchmarks/ci-smoke
 
 ## Fast lane for the streaming placement service alone: the open-loop
@@ -32,22 +33,31 @@ bench-serve:
 		--out results/benchmarks/ci-smoke \
 		--check-against results/benchmarks/smoke
 
+## Fast lane for the erasure-coding data plane alone: fig1's batched
+## cohort-vs-per-item encode (digest + speedup + compile census) and
+## fig13's pipelined-vs-serial checkpoint upload, gated against the
+## committed smoke baselines.
+bench-ec:
+	$(PYTHON) -m benchmarks.run --only fig1,fig13 --smoke \
+		--out results/benchmarks/ci-smoke \
+		--check-against results/benchmarks/smoke
+
 ## Benchmark-regression gate: run the CI-sized sweeps into the scratch
 ## directory and fail if any gated decision-cost metric regressed >20%
 ## against the committed smoke baselines (results/benchmarks/smoke/).
 ## Regenerate baselines with:
-##   $(PYTHON) -m benchmarks.run --only table2,fig12,serve_load --smoke --out results/benchmarks/smoke
+##   $(PYTHON) -m benchmarks.run --only table2,fig12,serve_load,fig1,fig13 --smoke --out results/benchmarks/smoke
 bench-check:
-	$(PYTHON) -m benchmarks.run --only table2,fig12,serve_load --smoke \
+	$(PYTHON) -m benchmarks.run --only table2,fig12,serve_load,fig1,fig13 --smoke \
 		--out results/benchmarks/ci-smoke \
 		--check-against results/benchmarks/smoke
 
 ## Regenerate the committed smoke baselines the gate compares against
 ## (results/benchmarks/smoke/).  Run after an intentional perf change,
 ## an intentional behavior change to the fig12 equality-gated retained
-## fractions, or when rebasing the gate onto a new machine class —
-## then review and commit the JSON diff.  Full workflow:
-## benchmarks/README.md.
+## fractions or the fig1/fig13 digests, or when rebasing the gate onto
+## a new machine class — then review and commit the JSON diff.  Full
+## workflow: benchmarks/README.md.
 bench-baseline:
-	$(PYTHON) -m benchmarks.run --only table2,fig12,serve_load --smoke \
+	$(PYTHON) -m benchmarks.run --only table2,fig12,serve_load,fig1,fig13 --smoke \
 		--out results/benchmarks/smoke

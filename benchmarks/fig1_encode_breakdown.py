@@ -1,24 +1,64 @@
-"""Fig. 1: encode/decode/transfer time vs K (P=2 fixed).
+"""Fig. 1: encode/decode/transfer time vs K (P=2 fixed), plus the
+batched data-plane lane.
 
-Measures our GF(2^8) codec (the jnp reference path — the vectorized
-log/exp-table algorithm the paper's CPU numbers correspond to; the
-Pallas kernel targets TPU and only interprets on CPU) on a fixed-size
-item across K, plus the modeled upload time on the Most Used node set.
-Recalibrates ECTimeModel's linear coefficients and reports the R^2-style
-fit error, validating the paper's 'linear regression closely matches
-measurements' claim (§4.4).
+Per-K rows measure our GF(2^8) codec two ways on a fixed-size item: the
+jnp reference path (the vectorized log/exp-table algorithm the paper's
+CPU numbers correspond to) and the kernel path (Pallas on TPU; its
+jitted XLA bit-matmul twin off-TPU — same algorithm, honestly timeable
+on CPU CI), asserting the two are bit-identical.  Recalibrates
+ECTimeModel's linear coefficients and reports the fit error, validating
+the paper's 'linear regression closely matches measurements' claim
+(§4.4).
+
+The ``batched`` section is the regression lane for the multi-item data
+plane (repro.kernels.ops.encode_chunks_many): a cohort of ``n_groups``
+payloads is encoded per-item (one kernel launch per payload) and batched
+(ONE launch for the cohort), min-of-reps timed.  The gate
+(benchmarks/gate.py) pins the speedup ratio, the output digest, the
+bit-for-bit match against the per-item oracle, and the compile census —
+steady-state batched encode must issue ZERO new kernel signatures, the
+one-compile-per-(K, P, bucket) claim.
 """
 
+import hashlib
 import time
 
 import numpy as np
 
+from repro.core import shapes as core_shapes
 from repro.ec import ECCodec
+from repro.kernels import ops as kops
 from repro.storage import make_node_set
 from .common import csv_row, emit
 
 
-def run(size_mb: float = 8.0, p: int = 2, ks=(2, 4, 6, 8, 10, 14)) -> list[str]:
+def _digest(arrays) -> int:
+    """Order-sensitive content digest as an int (the gate only compares
+    numbers; 8 bytes of sha256 is plenty to pin bit-identical output)."""
+    h = hashlib.sha256()
+    for a in arrays:
+        h.update(np.ascontiguousarray(np.asarray(a, dtype=np.uint8)).tobytes())
+    return int.from_bytes(h.digest()[:8], "big")
+
+
+def _best_of(fn, reps: int):
+    """Min-of-reps wall time (load-spike-robust; matches common.py)."""
+    best, out = float("inf"), None
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def run(
+    size_mb: float = 8.0,
+    p: int = 2,
+    ks=(2, 4, 6, 8, 10, 14),
+    reps: int = 3,
+    n_groups: int = 32,
+    group_kb: int = 32,
+) -> list[str]:
     rng = np.random.default_rng(0)
     payload = rng.integers(0, 256, size=int(size_mb * 1e6), dtype=np.uint8).tobytes()
     nodes = make_node_set("most_used")
@@ -33,18 +73,88 @@ def run(size_mb: float = 8.0, p: int = 2, ks=(2, 4, 6, 8, 10, 14)) -> list[str]:
         out = codec.decode(chunks[keep], keep, len(payload))
         t_dec = time.perf_counter() - t0
         assert out == payload
+        # kernel path (Pallas on TPU / jitted XLA bit-matmul off-TPU):
+        # warm the jit cache, min-of-reps time, pin bit-identical to ref.
+        kcodec = ECCodec(k, p, use_kernel=True)
+        kcodec.encode(payload)
+        t_enc_kernel, kchunks = _best_of(lambda: kcodec.encode(payload), reps)
+        kernel_ok = np.array_equal(kchunks, chunks)
+        assert kernel_ok, f"kernel encode diverged from ref at k={k}"
         chunk_mb = size_mb / k
         t_up = chunk_mb / min(n.write_bw for n in nodes[: k + p])
-        rows.append({"k": k, "p": p, "encode_s": t_enc, "decode_s": t_dec, "upload_s": t_up})
-        lines.append(csv_row(f"fig1_encode_k{k}", t_enc * 1e6, f"decode_s={t_dec:.3f}"))
+        rows.append({
+            "k": k, "p": p, "encode_s": t_enc, "decode_s": t_dec,
+            "kernel_encode_s": t_enc_kernel, "kernel_matches_ref": int(kernel_ok),
+            "upload_s": t_up,
+        })
+        lines.append(csv_row(
+            f"fig1_encode_k{k}", t_enc * 1e6,
+            f"decode_s={t_dec:.3f};kernel_encode_s={t_enc_kernel:.3f}"
+        ))
     # decode grows ~linearly in K (the paper's headline observation)
     ks_arr = np.array([r["k"] for r in rows], float)
     dec = np.array([r["decode_s"] for r in rows])
     slope, intercept = np.polyfit(ks_arr, dec, 1)
     pred = slope * ks_arr + intercept
     rel_err = float(np.abs(pred - dec).mean() / dec.mean())
+
+    batched, bl = _batched_lane(p, reps=reps, n_groups=n_groups, group_kb=group_kb)
+    lines.extend(bl)
+
     emit("fig1", {"size_mb": size_mb, "rows": rows,
                   "decode_linear_fit": {"slope": slope, "intercept": intercept,
-                                        "mean_rel_err": rel_err}})
+                                        "mean_rel_err": rel_err},
+                  "batched": batched,
+                  "matrix_cache": kops.matrix_cache_stats()})
     lines.append(csv_row("fig1_linear_fit", 0.0, f"decode_fit_rel_err={rel_err:.3f}"))
     return lines
+
+
+def _batched_lane(p: int, *, reps: int, n_groups: int, group_kb: int,
+                  k: int = 6) -> tuple[dict, list[str]]:
+    """Per-item kernel launches vs one cohort launch, same payloads."""
+    rng = np.random.default_rng(1)
+    payloads = [
+        rng.integers(0, 256, size=group_kb * 1024, dtype=np.uint8).tobytes()
+        for _ in range(n_groups)
+    ]
+    codec = ECCodec(k, p, use_kernel=True)
+
+    def per_item():
+        return [codec.encode(pl) for pl in payloads]
+
+    def batched():
+        return codec.encode_many(payloads)
+
+    per_item(); batched()  # warm: jit compiles per (K, P, bucket) rung
+    warmed = core_shapes.issued_shapes(kops.CENSUS_KERNEL)
+    t_item, want = _best_of(per_item, reps)
+    t_batch, got = _best_of(batched, reps)
+    # Steady state must reuse the warmed compiles: the one-compile-per-
+    # (K, P, bucket) census claim, asserted in-bench (gate.py pins the
+    # count too, but a nonzero delta should fail loudly with context).
+    steady_new = core_shapes.issued_shapes(kops.CENSUS_KERNEL) - warmed
+    assert not steady_new, f"steady-state encode issued new compiles: {steady_new}"
+    ok = len(want) == len(got) and all(
+        np.array_equal(a, b) for a, b in zip(want, got)
+    )
+    assert ok, "batched encode diverged from the per-item oracle"
+    out = {
+        "k": k, "p": p, "n_groups": n_groups, "group_kb": group_kb,
+        "reps": max(1, reps),
+        "per_item_s": t_item,
+        "batched_s": t_batch,
+        "speedup_vs_per_item": t_item / t_batch if t_batch > 0 else float("inf"),
+        "matches_per_item": int(ok),
+        "chunks_digest": _digest(got),
+        "steady_state_new_signatures": len(steady_new),
+        "warmed_signatures": len(warmed),
+    }
+    lines = [
+        csv_row("fig1_encode_per_item", t_item * 1e6,
+                f"n_groups={n_groups};group_kb={group_kb}"),
+        csv_row("fig1_encode_batched", t_batch * 1e6,
+                f"speedup={out['speedup_vs_per_item']:.2f}x;"
+                f"digest={out['chunks_digest']}"),
+    ]
+    return out, lines

@@ -64,6 +64,27 @@ DEFAULT_THRESHOLD = 0.20
 #: gate on noise.  LB's committed column likewise (its cluster-global
 #: penalty forces per-item rescoring, so the ratio hovers near 1).
 GATE_METRICS: dict[str, tuple[tuple, ...]] = {
+    # Batched erasure-coding data plane (benchmarks/fig1, batched lane).
+    # The cohort-vs-per-item speedup is min-of-reps timed and ratio-
+    # gated; the chunk digest and oracle match are deterministic (seeded
+    # payloads, bit-exact codec) and equality-gated; steady-state compile
+    # signatures must stay at zero — one compile per (K, P, bucket).
+    "fig1": (
+        ("batched.speedup_vs_per_item", "higher"),
+        ("batched.chunks_digest", "equal"),
+        ("batched.matches_per_item", "equal"),
+        ("batched.steady_state_new_signatures", "equal"),
+    ),
+    # Pipelined checkpoint upload (benchmarks/fig13): serial/pipelined
+    # ratio is min-of-reps timed on the simulated-bandwidth fabric;
+    # the placement digest pins that the batched place_many path makes
+    # identical decisions in both modes (and across PRs).
+    "fig13": (
+        ("drex_sc.pipeline_speedup", "higher"),
+        ("drex_sc.placements_digest", "equal"),
+        ("drex_sc.placements_match_serial", "equal"),
+        ("drex_sc.restore_ok", "equal"),
+    ),
     "table2": (
         ("batched_sc.decision_cost.speedup_vs_scalar", "higher"),
         ("batched_greedy.greedy_min_storage.decision_cost.speedup_vs_scalar",
@@ -111,7 +132,7 @@ GATE_METRICS: dict[str, tuple[tuple, ...]] = {
 #: keys that parameterize a benchmark section; compared along every
 #: gated metric's ancestor path so a SMOKE_KWARGS tweak (different
 #: batch/node count) is skipped instead of gated apples-to-oranges.
-_PARAM_KEYS = ("n_nodes", "batch", "n_items")
+_PARAM_KEYS = ("n_nodes", "batch", "n_items", "n_groups", "group_kb", "item_kb")
 
 
 def _path_keys(path) -> tuple:

@@ -62,6 +62,15 @@ BENCHES = {
 
 #: reduced parameters per benchmark under --smoke (others run unchanged).
 SMOKE_KWARGS = {
+    # Batched-EC data plane lane: small per-K sweep, but a cohort big
+    # enough that the gated per-item-vs-batched ratio divides dispatch
+    # overhead x n_groups, not timer noise.
+    "fig1": dict(size_mb=1.0, ks=(2, 4, 6), reps=2, n_groups=32, group_kb=16),
+    # Pipelined-vs-serial checkpoint upload on a CI-sized synthetic
+    # state; link_mbps stays at the default so the put cost (what the
+    # pipeline overlaps) is the same regime as the full run.
+    "fig13": dict(n_items=16, item_kb=128, reps=3,
+                  algos=("drex_sc", "ec(3,2)")),
     # greedy_batch stays >= 32 so the gated speedup ratios divide two
     # multi-millisecond totals (min-of-reps timed) instead of dispatch
     # jitter; see benchmarks/gate.py.

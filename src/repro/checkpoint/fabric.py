@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import pathlib
 import threading
+import time
 from typing import Optional, Sequence
 
 import numpy as np
@@ -23,11 +24,23 @@ __all__ = ["StorageFabric"]
 
 
 class StorageFabric:
-    def __init__(self, nodes: Sequence[StorageNode], persist_dir: Optional[str] = None):
+    def __init__(
+        self,
+        nodes: Sequence[StorageNode],
+        persist_dir: Optional[str] = None,
+        link_mbps: Optional[float] = None,
+    ):
         self.nodes = list(nodes)
         self.cluster = ClusterView.from_nodes(self.nodes)
         self._blobs: list[dict[str, bytes]] = [{} for _ in self.nodes]
         self._lock = threading.Lock()
+        #: simulated per-put link bandwidth (MB/s): each ``put`` blocks
+        #: its calling thread for blob_mb / link_mbps *outside* the
+        #: fabric lock, so concurrent writers overlap like independent
+        #: network links.  ``None`` = in-memory speed (tests, simulator);
+        #: benchmarks/fig13 uses this to make upload pipelining
+        #: measurable against a realistic write cost.
+        self.link_mbps = link_mbps
         self.persist_dir = pathlib.Path(persist_dir) if persist_dir else None
         if self.persist_dir:
             for i in range(len(self.nodes)):
@@ -37,6 +50,8 @@ class StorageFabric:
     # -- data plane -----------------------------------------------------------
 
     def put(self, node_id: int, key: str, blob: bytes) -> None:
+        if self.link_mbps:
+            time.sleep(len(blob) / 1e6 / self.link_mbps)
         with self._lock:
             if not self.cluster.alive[node_id]:
                 raise IOError(f"node {node_id} is down")

@@ -5,10 +5,20 @@ Every checkpoint is cut into ~item_mb groups; each group is a D-Rex
 "data item": the configured scheduler picks (K, P, M) per group against
 the live heterogeneous fabric (reliability target + retention window are
 checkpoint policy), the Cauchy-RS kernel encodes, and chunks land on the
-chosen nodes. Restore tolerates up to P node losses per group; `repair`
+chosen nodes.  Restore tolerates up to P node losses per group; `repair`
 proactively re-encodes degraded groups after failures (§2
 failure-recovery techniques layer on the paper's placement model
 unchanged).
+
+``save`` is a streaming encode→place→write pipeline: all groups of a
+checkpoint are placed in ONE ``place_many`` batch (one shared
+``BatchContext``, so the reliability DP amortizes across every group),
+encoded in per-(K, P) cohort waves through ``ECCodec.encode_many`` (one
+kernel launch per wave), and each wave's fabric ``put`` overlaps the
+*next* wave's encode through a multi-worker I/O pool (double-buffered —
+at most two waves of chunks are in flight, bounding peak memory).
+``pipeline_workers=0`` recovers the legacy serial path (per-group encode
+then put), which benchmarks/fig13 uses as the upload baseline.
 
 The manifest is mesh-agnostic (leaf shapes/dtypes + tree structure), so
 restore composes with elastic rescale: `restore_latest` returns host
@@ -22,6 +32,7 @@ import io
 import json
 import threading
 import time
+from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Optional
 
@@ -29,7 +40,7 @@ import jax
 import numpy as np
 
 from repro.core import BatchContext, DataItem, Placement, PlacementEngine, Scheduler
-from repro.ec import ECCodec
+from repro.ec import ECCodec, plan_cohorts
 from repro.train.step import TrainState
 
 from .fabric import StorageFabric
@@ -42,8 +53,14 @@ class CheckpointPolicy:
     reliability_target: float = 0.999
     retention_days: float = 30.0
     item_mb: float = 64.0            # max group payload size
-    use_kernel: bool = True          # Pallas bit-matrix codec vs ref
+    use_kernel: bool = True          # Pallas/XLA bit-matrix codec vs ref
     keep_last: int = 2               # garbage-collect older checkpoints
+    #: fabric-write workers for the save pipeline; 0 = legacy serial
+    #: (per-group encode then put, no overlap — the fig13 baseline).
+    pipeline_workers: int = 2
+    #: max groups fused into one encode launch; also the wave size the
+    #: pipeline double-buffers (bounds peak chunk memory to ~2 waves).
+    encode_wave_groups: int = 16
 
 
 @dataclasses.dataclass
@@ -82,7 +99,18 @@ class DRexCheckpointer:
         self.scheduler = self.engine.scheduler
         self.policy = policy or CheckpointPolicy()
         self._manifests: dict[int, dict] = {}
-        self._pool = ThreadPoolExecutor(max_workers=1)
+        # Two pools, no cross-wait cycle: save drivers (async snapshots)
+        # wait only on I/O futures, never on other drivers — so two
+        # overlapping save_async calls cannot deadlock and no longer
+        # serialize behind a single worker.
+        self._save_pool = ThreadPoolExecutor(max_workers=2)
+        self._io_pool = ThreadPoolExecutor(
+            max_workers=max(1, self.policy.pipeline_workers)
+        )
+        #: serializes the placement phase (engine + item-id counter) so
+        #: concurrent saves see consistent cluster snapshots.
+        self._place_lock = threading.Lock()
+        self._meta_lock = threading.Lock()
         self._item_counter = 0
         self.stats: dict[str, float] = {
             "bytes_raw": 0.0, "bytes_stored": 0.0, "encode_s": 0.0, "place_s": 0.0,
@@ -91,15 +119,21 @@ class DRexCheckpointer:
     # -- save -------------------------------------------------------------------
 
     def save(self, state: TrainState, step: int) -> dict:
+        """Encode→place→write one checkpoint through the batched pipeline.
+
+        Placement decisions for all groups are made against the cluster
+        view at the start of the save (one ``place_many`` batch) — the
+        fabric's byte accounting still updates as chunks land."""
         leaves, treedef = jax.tree.flatten(state)
         # The tree structure is reconstructed from a like-state at restore
         # (shapes/dtypes per leaf live in the manifest).
         manifest: dict[str, Any] = {"step": step, "leaves": []}
         policy = self.policy
-        # One checkpoint = one placement batch: groups share retention and
-        # reliability target, so the engine's batch context amortizes the
-        # scheduler's reliability DP across all groups of this save.
-        ctx = BatchContext()
+        max_bytes = int(policy.item_mb * 1e6)
+        # 1. Split every leaf into group payloads (bucket-padded).
+        payloads: list[bytes] = []
+        orig_lens: list[int] = []
+        slots: list[tuple[int, int]] = []  # (leaf_i, part)
         for li, leaf in enumerate(leaves):
             if leaf is None:
                 manifest["leaves"].append(None)
@@ -109,15 +143,111 @@ class DRexCheckpointer:
                 {"shape": list(arr.shape), "dtype": str(arr.dtype), "groups": []}
             )
             raw = arr.tobytes()
-            self.stats["bytes_raw"] += len(raw)
-            max_bytes = int(policy.item_mb * 1e6)
+            with self._meta_lock:
+                self.stats["bytes_raw"] += len(raw)
             for off in range(0, max(len(raw), 1), max_bytes):
                 payload = raw[off : off + max_bytes]
-                g = self._store_group(payload, step, li, off // max_bytes, ctx)
-                manifest["leaves"][li]["groups"].append(dataclasses.asdict(g))
-        self._manifests[step] = manifest
+                payloads.append(_pad_to_bucket(payload))
+                orig_lens.append(len(payload))
+                slots.append((li, off // max_bytes))
+        # 2. One placement batch: groups share retention and reliability
+        # target, so the engine's batch context amortizes the scheduler's
+        # reliability DP across all groups of this save.
+        with self._place_lock:
+            items = []
+            for payload in payloads:
+                self._item_counter += 1
+                items.append(DataItem(
+                    item_id=self._item_counter,
+                    size_mb=max(len(payload) / 1e6, 1e-6),
+                    arrival_time=float(step),
+                    delta_t_days=policy.retention_days,
+                    reliability_target=policy.reliability_target,
+                ))
+            records = self.engine.place_many(items, ctx=BatchContext())
+        placements: list[Placement] = []
+        for item, record in zip(items, records):
+            with self._meta_lock:
+                self.stats["place_s"] += record.overhead_s
+            if record.placement is None:
+                raise IOError(
+                    f"D-Rex could not place checkpoint group "
+                    f"({item.size_mb:.1f} MB, "
+                    f"RT={policy.reliability_target}): {record.reason}"
+                )
+            placements.append(record.placement)
+        # 3. Cohort waves: encode cohort i+1 while cohort i's chunks land.
+        groups: list[Optional[_Group]] = [None] * len(payloads)
+        wave_size = 1 if policy.pipeline_workers == 0 else max(
+            1, policy.encode_wave_groups
+        )
+        waves: list[list[int]] = []
+        for (_kp, idxs) in plan_cohorts([(pl.k, pl.p) for pl in placements]):
+            for w in range(0, len(idxs), wave_size):
+                waves.append(idxs[w : w + wave_size])
+        pending: deque[Future] = deque()
+        try:
+            self._encode_waves(
+                waves, payloads, placements, slots, orig_lens, groups,
+                step, pending,
+            )
+        except BaseException:
+            while pending:  # no orphaned background puts behind an error
+                try:
+                    pending.popleft().result()
+                except Exception:
+                    pass
+            raise
+        while pending:
+            pending.popleft().result()
+        # 4. Manifest in original (leaf, part) order.
+        for g, (li, _part) in zip(groups, slots):
+            manifest["leaves"][li]["groups"].append(dataclasses.asdict(g))
+        with self._meta_lock:
+            self._manifests[step] = manifest
         self._gc(step)
         return manifest
+
+    def _encode_waves(
+        self, waves, payloads, placements, slots, orig_lens, groups,
+        step, pending,
+    ) -> None:
+        """Encode each wave and hand its chunks to the I/O pool."""
+        policy = self.policy
+        for wave in waves:
+            k, p = placements[wave[0]].k, placements[wave[0]].p
+            codec = ECCodec(k, p, use_kernel=policy.use_kernel)
+            t0 = time.perf_counter()
+            chunk_mats = codec.encode_many([payloads[i] for i in wave])
+            with self._meta_lock:
+                self.stats["encode_s"] += time.perf_counter() - t0
+            entries = []
+            for i, chunks in zip(wave, chunk_mats):
+                li, part = slots[i]
+                g = _Group(
+                    key=f"ck{step}_l{li}_p{part}", k=k, p=p,
+                    node_ids=list(placements[i].node_ids),
+                    orig_nbytes=orig_lens[i],
+                )
+                groups[i] = g
+                entries.append((g, chunks))
+            if policy.pipeline_workers == 0:
+                self._put_wave(entries)
+            else:
+                pending.append(self._io_pool.submit(self._put_wave, entries))
+                # double buffer: at most 2 waves of chunks in flight
+                while len(pending) > 2:
+                    pending.popleft().result()
+
+    def _put_wave(self, entries: list[tuple[_Group, np.ndarray]]) -> None:
+        """Land one wave's chunks on the fabric (runs on the I/O pool)."""
+        stored = 0.0
+        for g, chunks in entries:
+            for row, node in enumerate(g.node_ids):
+                self.fabric.put(node, f"{g.key}_r{row}", chunks[row].tobytes())
+                stored += chunks.shape[1]
+        with self._meta_lock:
+            self.stats["bytes_stored"] += stored
 
     def save_async(self, state: TrainState, step: int) -> Future:
         # device_get on the caller thread (consistent snapshot), encode+put
@@ -131,45 +261,7 @@ class DRexCheckpointer:
             fake_state = jax.tree.unflatten(jax.tree.structure(state), host_leaves)
             return self.save(fake_state, step)
 
-        return self._pool.submit(work)
-
-    def _store_group(
-        self,
-        payload: bytes,
-        step: int,
-        leaf_i: int,
-        part: int,
-        ctx: BatchContext | None = None,
-    ) -> _Group:
-        policy = self.policy
-        orig_len = len(payload)
-        payload = _pad_to_bucket(payload)
-        size_mb = max(len(payload) / 1e6, 1e-6)
-        self._item_counter += 1
-        item = DataItem(
-            item_id=self._item_counter,
-            size_mb=size_mb,
-            arrival_time=float(step),
-            delta_t_days=policy.retention_days,
-            reliability_target=policy.reliability_target,
-        )
-        record = self.engine.place(item, ctx=ctx)
-        self.stats["place_s"] += record.overhead_s
-        if record.placement is None:
-            raise IOError(
-                f"D-Rex could not place checkpoint group ({size_mb:.1f} MB, "
-                f"RT={policy.reliability_target}): {record.reason}"
-            )
-        pl = record.placement
-        codec = ECCodec(pl.k, pl.p, use_kernel=policy.use_kernel)
-        t0 = time.perf_counter()
-        chunks = codec.encode(payload)
-        self.stats["encode_s"] += time.perf_counter() - t0
-        key = f"ck{step}_l{leaf_i}_p{part}"
-        for row, node in enumerate(pl.node_ids):
-            self.fabric.put(node, f"{key}_r{row}", chunks[row].tobytes())
-            self.stats["bytes_stored"] += chunks.shape[1]
-        return _Group(key=key, k=pl.k, p=pl.p, node_ids=list(pl.node_ids), orig_nbytes=orig_len)
+        return self._save_pool.submit(work)
 
     # -- restore ----------------------------------------------------------------
 
@@ -195,28 +287,41 @@ class DRexCheckpointer:
                 out_leaves.append(None)
                 continue
             buf = io.BytesIO()
-            for g in meta["groups"]:
-                buf.write(self._load_group(_Group(**g)))
+            # All groups of a leaf decode in cohort launches (per (K, P)
+            # and erasure pattern) instead of one kernel call per group.
+            for raw in self._load_groups([_Group(**g) for g in meta["groups"]]):
+                buf.write(raw)
             arr = np.frombuffer(buf.getvalue(), dtype=np.dtype(meta["dtype"]))
             out_leaves.append(arr.reshape(meta["shape"]))
         return jax.tree.unflatten(treedef, out_leaves)
 
+    def _load_groups(self, groups: list[_Group]) -> list[bytes]:
+        """Fetch + decode many groups, batching decodes by (K, P)."""
+        gathered: list[tuple[np.ndarray, np.ndarray, int]] = []
+        for g in groups:
+            rows, chunks = [], []
+            for row, node in enumerate(g.node_ids):
+                blob = self.fabric.get(node, f"{g.key}_r{row}")
+                if blob is not None:
+                    rows.append(row)
+                    chunks.append(np.frombuffer(blob, dtype=np.uint8))
+                if len(rows) == g.k:
+                    break
+            if len(rows) < g.k:
+                raise IOError(
+                    f"checkpoint group {g.key} unrecoverable: "
+                    f"{len(rows)}/{g.k} chunks available (P={g.p} exceeded)"
+                )
+            gathered.append((np.stack(chunks), np.array(rows), g.orig_nbytes))
+        outs: list = [None] * len(groups)
+        for (k, p), idxs in plan_cohorts([(g.k, g.p) for g in groups]):
+            codec = ECCodec(k, p, use_kernel=self.policy.use_kernel)
+            for i, raw in zip(idxs, codec.decode_many([gathered[i] for i in idxs])):
+                outs[i] = raw
+        return outs
+
     def _load_group(self, g: _Group) -> bytes:
-        rows, chunks = [], []
-        for row, node in enumerate(g.node_ids):
-            blob = self.fabric.get(node, f"{g.key}_r{row}")
-            if blob is not None:
-                rows.append(row)
-                chunks.append(np.frombuffer(blob, dtype=np.uint8))
-            if len(rows) == g.k:
-                break
-        if len(rows) < g.k:
-            raise IOError(
-                f"checkpoint group {g.key} unrecoverable: "
-                f"{len(rows)}/{g.k} chunks available (P={g.p} exceeded)"
-            )
-        codec = ECCodec(g.k, g.p, use_kernel=self.policy.use_kernel)
-        return codec.decode(np.stack(chunks), np.array(rows), g.orig_nbytes)
+        return self._load_groups([g])[0]
 
     # -- failure handling ---------------------------------------------------------
 
@@ -229,6 +334,11 @@ class DRexCheckpointer:
         (K,P), re-maps; best-effort mode — group health is reported by
         :meth:`group_reliability`).  Returns the number of chunks rebuilt.
 
+        Re-encodes run through the same cached-matrix cohort path as
+        ``save`` (one launch per (K, P) cohort of degraded groups); the
+        coding matrices themselves come from the process-wide cache, so
+        steady-state repair rebuilds no matrices at all.
+
         A group whose missing chunks cannot *all* be re-placed (not enough
         live nodes with capacity) is left untouched and reported: with
         ``strict=True`` (default) an :class:`IOError` lists every such
@@ -240,6 +350,8 @@ class DRexCheckpointer:
         manifest = self._manifests[step]
         rebuilt = 0
         unplaced: list[tuple[str, int, str]] = []
+        # 1. Collect every degraded group (reads only; no mutation yet).
+        degraded: list[tuple[dict, _Group, list[tuple[int, int]]]] = []
         for meta in manifest["leaves"]:
             if meta is None:
                 continue
@@ -250,20 +362,34 @@ class DRexCheckpointer:
                     for row, node in enumerate(g.node_ids)
                     if self.fabric.get(node, f"{g.key}_r{row}") is None
                 ]
-                if not missing:
-                    continue
-                payload = self._load_group(g)  # raises if > P lost
-                codec = ECCodec(g.k, g.p, use_kernel=self.policy.use_kernel)
-                # Re-pad exactly as the original encode did: replacement
-                # chunks must match the surviving chunks' shape.
-                chunks = codec.encode(_pad_to_bucket(payload))
-                chunk_mb = chunks.shape[1] / 1e6
-                missing_rows = {row for row, _ in missing}
-                survivors = [
-                    node
-                    for row, node in enumerate(g.node_ids)
-                    if row not in missing_rows
-                ]
+                if missing:
+                    degraded.append((gd, g, missing))
+        if not degraded:
+            return 0
+        # 2. Cohort re-encode: decode the survivors (raises if > P lost),
+        # re-pad exactly as the original encode did (replacement chunks
+        # must match the surviving chunks' shape), one launch per (K, P).
+        payloads = self._load_groups([g for _, g, _ in degraded])
+        specs = [(g.k, g.p) for _, g, _ in degraded]
+        all_chunks: list = [None] * len(degraded)
+        for (k, p), idxs in plan_cohorts(specs):
+            codec = ECCodec(k, p, use_kernel=self.policy.use_kernel)
+            for i, chunks in zip(
+                idxs,
+                codec.encode_many([_pad_to_bucket(payloads[i]) for i in idxs]),
+            ):
+                all_chunks[i] = chunks
+        # 3. Re-place + land replacements, group by group (plans see the
+        # fabric bytes earlier repairs already landed).
+        for (gd, g, missing), chunks in zip(degraded, all_chunks):
+            chunk_mb = chunks.shape[1] / 1e6
+            missing_rows = {row for row, _ in missing}
+            survivors = [
+                node
+                for row, node in enumerate(g.node_ids)
+                if row not in missing_rows
+            ]
+            with self._place_lock:
                 self._item_counter += 1
                 item = DataItem(
                     item_id=self._item_counter,
@@ -286,14 +412,14 @@ class DRexCheckpointer:
                     require_target=False,
                     commit=False,
                 )
-                if not plan.ok:
-                    unplaced.append((g.key, len(missing), plan.reason))
-                    continue
-                for (row, _), new_node in zip(missing, plan.new_nodes):
-                    self.fabric.put(new_node, f"{g.key}_r{row}", chunks[row].tobytes())
-                    g.node_ids[row] = new_node
-                    rebuilt += 1
-                gd["node_ids"] = g.node_ids
+            if not plan.ok:
+                unplaced.append((g.key, len(missing), plan.reason))
+                continue
+            for (row, _), new_node in zip(missing, plan.new_nodes):
+                self.fabric.put(new_node, f"{g.key}_r{row}", chunks[row].tobytes())
+                g.node_ids[row] = new_node
+                rebuilt += 1
+            gd["node_ids"] = g.node_ids
         if unplaced and strict:
             detail = "; ".join(
                 f"{key}: {n} missing chunk(s) ({reason})"
@@ -326,10 +452,13 @@ class DRexCheckpointer:
     # -- gc -------------------------------------------------------------------------
 
     def _gc(self, newest_step: int) -> None:
-        steps = sorted(self._manifests)
-        while len(steps) > self.policy.keep_last:
-            victim = steps.pop(0)
-            man = self._manifests.pop(victim)
+        with self._meta_lock:
+            steps = sorted(self._manifests)
+            victims = []
+            while len(steps) > self.policy.keep_last:
+                victim = steps.pop(0)
+                victims.append(self._manifests.pop(victim))
+        for man in victims:
             for meta in man["leaves"]:
                 if meta is None:
                     continue

@@ -44,6 +44,7 @@ __all__ = [
     "ShapeBucketer",
     "batch_pad",
     "compile_cache_stats",
+    "ec_block_pad",
     "issued_shapes",
     "node_pad",
     "record_compile",
@@ -185,6 +186,26 @@ def batch_pad(B: int) -> int:
 def start_pad(s: int) -> int:
     """Padded start-axis length for the SC kernel's window starts."""
     return DEFAULT.bucket("sc_starts", s)
+
+
+def ec_block_pad(n_blocks: int) -> int:
+    """Padded byte-block count for the EC coding kernels' byte axis.
+
+    The bit-matmul kernels are compiled per (bit-matrix shape, byte-block
+    count); bucketing the block count through the shared rungs means a
+    checkpoint whose cohort sizes churn step to step reuses one compiled
+    extent per (K, P, bucket) instead of recompiling per distinct byte
+    length (the padded tail columns are zeros and are sliced off).
+
+    Below ALIGN blocks the ladder is powers of two instead of the
+    multiple-of-8 floor: a small group's chunks are often 1-4 blocks
+    wide, and padding them all to 8 would waste up to 8x compute on the
+    per-item path for no compile-count benefit (1/2/4/8 is still only
+    four shapes)."""
+    n = max(1, int(n_blocks))
+    if n < ALIGN:
+        return pow2(n)
+    return DEFAULT.bucket("ec_blocks", n)
 
 
 def record_compile(kernel: str, signature: tuple) -> bool:

@@ -11,7 +11,7 @@ from .gf256 import (
     gf_mul,
     gf_to_bitmatrix,
 )
-from .codec import ECCodec, encode_item, decode_item
+from .codec import ECCodec, encode_item, decode_item, encode_batch, plan_cohorts
 
 __all__ = [
     "gf_mul",
@@ -25,4 +25,6 @@ __all__ = [
     "ECCodec",
     "encode_item",
     "decode_item",
+    "encode_batch",
+    "plan_cohorts",
 ]

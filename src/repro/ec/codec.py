@@ -1,20 +1,40 @@
 """Item-level erasure codec: bytes -> N chunks -> bytes (with erasures).
 
 Wraps the chunk-matrix kernels with the split/pad/join bookkeeping the
-checkpoint manager and benchmarks need. A ``ECCodec(k, p)`` is the data
+checkpoint manager and benchmarks need.  A ``ECCodec(k, p)`` is the data
 plane counterpart of a :class:`repro.core.types.Placement`.
+
+Batch API: :meth:`ECCodec.encode_many` / :meth:`ECCodec.decode_many`
+drive whole cohorts of payloads through one kernel launch per coding
+matrix (see ``repro.kernels.ops``), and the module-level planner
+(:func:`plan_cohorts` / :func:`encode_batch`) partitions a mixed list of
+``(k, p)`` codings into those cohorts.  The per-item :meth:`ECCodec.
+encode` / :meth:`ECCodec.decode` path is the bit-for-bit oracle the
+batched paths are pinned against (tests/test_ec_batched.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 import numpy as np
-import jax.numpy as jnp
 
 from repro.kernels import ops as kops
 
-__all__ = ["ECCodec", "encode_item", "decode_item"]
+__all__ = [
+    "ECCodec",
+    "encode_item",
+    "decode_item",
+    "plan_cohorts",
+    "encode_batch",
+]
+
+
+def _as_bytes_array(payload) -> np.ndarray:
+    if isinstance(payload, (bytes, bytearray, memoryview)):
+        return np.frombuffer(bytes(payload), dtype=np.uint8)
+    return np.asarray(payload, dtype=np.uint8).ravel()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,19 +50,56 @@ class ECCodec:
     def chunk_len(self, nbytes: int) -> int:
         return -(-nbytes // self.k)  # ceil(size / K), paper Table 1
 
-    def encode(self, payload: bytes | np.ndarray) -> np.ndarray:
-        """bytes -> (N, chunk_len) uint8: K data rows then P parity rows."""
-        buf = np.frombuffer(bytes(payload), dtype=np.uint8) if isinstance(
-            payload, (bytes, bytearray)
-        ) else np.asarray(payload, dtype=np.uint8).ravel()
+    def _data_matrix(self, payload) -> np.ndarray:
+        """(K, chunk_len) zero-padded data rows for one payload."""
+        buf = _as_bytes_array(payload)
         clen = self.chunk_len(buf.size)
         padded = np.zeros(self.k * clen, dtype=np.uint8)
         padded[: buf.size] = buf
-        data = padded.reshape(self.k, clen)
+        return padded.reshape(self.k, clen)
+
+    def encode(self, payload: bytes | np.ndarray) -> np.ndarray:
+        """bytes -> (N, chunk_len) uint8: K data rows then P parity rows.
+
+        An empty payload yields a well-defined empty manifest — shape
+        (N, 0), no kernel call (the kernels require block-aligned widths
+        and an empty matrix has none)."""
+        data = self._data_matrix(payload)
+        if data.shape[1] == 0:
+            return np.zeros((self.n, 0), dtype=np.uint8)
         parity = np.asarray(
             kops.encode_chunks(data, self.p, use_kernel=self.use_kernel)
         )
         return np.concatenate([data, parity], axis=0)
+
+    def encode_many(self, payloads: Sequence) -> list[np.ndarray]:
+        """Encode a cohort of payloads in ONE kernel launch.
+
+        Payload lengths may differ (the code is columnwise; the kernel
+        sees the cohort concatenated along the byte axis).  Returns the
+        (N, chunk_len_i) chunk matrices in input order, bit-identical to
+        per-item :meth:`encode`."""
+        datas = [self._data_matrix(p) for p in payloads]
+        parities = kops.encode_chunks_many(
+            datas, self.p, use_kernel=self.use_kernel
+        )
+        return [
+            np.concatenate([d, np.asarray(par)], axis=0)
+            for d, par in zip(datas, parities)
+        ]
+
+    def _select_rows(
+        self, chunks: np.ndarray, rows: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Deterministic choice of K rows (sorted; systematic first)."""
+        chunks = np.asarray(chunks, dtype=np.uint8)
+        rows = np.asarray(rows)
+        if chunks.shape[0] < self.k:
+            raise ValueError(
+                f"need at least K={self.k} chunks, got {chunks.shape[0]}"
+            )
+        sel = np.argsort(rows)[: self.k]
+        return chunks[sel], rows[sel]
 
     def decode(
         self,
@@ -51,24 +108,83 @@ class ECCodec:
         orig_nbytes: int,
     ) -> bytes:
         """Any K chunk rows (+ their row indices) -> original payload."""
-        chunks = np.asarray(chunks, dtype=np.uint8)
-        rows = np.asarray(rows)
-        if chunks.shape[0] < self.k:
-            raise ValueError(
-                f"need at least K={self.k} chunks, got {chunks.shape[0]}"
-            )
-        sel = np.argsort(rows)[: self.k]  # deterministic choice of K rows
-        use_rows = rows[sel]
-        use_chunks = chunks[sel]
+        use_chunks, use_rows = self._select_rows(chunks, rows)
+        if orig_nbytes == 0 or use_chunks.shape[1] == 0:
+            return b""
         if np.array_equal(use_rows, np.arange(self.k)):
             data = use_chunks  # all-systematic fast path: no math
         else:
             data = np.asarray(
                 kops.decode_chunks(
-                    use_chunks, use_rows, self.k, self.p, use_kernel=self.use_kernel
+                    use_chunks, use_rows, self.k, self.p,
+                    use_kernel=self.use_kernel,
                 )
             )
         return data.reshape(-1)[:orig_nbytes].tobytes()
+
+    def decode_many(
+        self, parts: Sequence[tuple[np.ndarray, np.ndarray, int]]
+    ) -> list[bytes]:
+        """Decode a cohort of ``(chunks, rows, orig_nbytes)`` triples.
+
+        All-systematic items take the no-math fast path; the rest run
+        one kernel launch per distinct erasure pattern.  Bit-identical
+        to per-item :meth:`decode`."""
+        outs: list = [None] * len(parts)
+        pend_idx: list[int] = []
+        pend_chunks: list[np.ndarray] = []
+        pend_rows: list[np.ndarray] = []
+        systematic = np.arange(self.k)
+        for i, (chunks, rows, orig_nbytes) in enumerate(parts):
+            use_chunks, use_rows = self._select_rows(chunks, rows)
+            if orig_nbytes == 0 or use_chunks.shape[1] == 0:
+                outs[i] = b""
+            elif np.array_equal(use_rows, systematic):
+                outs[i] = use_chunks.reshape(-1)[:orig_nbytes].tobytes()
+            else:
+                pend_idx.append(i)
+                pend_chunks.append(use_chunks)
+                pend_rows.append(use_rows)
+        if pend_idx:
+            datas = kops.decode_chunks_many(
+                pend_chunks, pend_rows, self.k, self.p,
+                use_kernel=self.use_kernel,
+            )
+            for i, data in zip(pend_idx, datas):
+                nbytes = parts[i][2]
+                outs[i] = np.asarray(data).reshape(-1)[:nbytes].tobytes()
+        return outs
+
+
+def plan_cohorts(specs: Sequence[tuple[int, int]]) -> list[tuple[tuple[int, int], list[int]]]:
+    """Partition payload indices by codec shape.
+
+    ``specs[i] = (k, p)`` for payload i; returns ``[((k, p), indices),
+    ...]`` in first-appearance order — each cohort shares one coding
+    matrix and therefore one kernel launch."""
+    order: dict[tuple[int, int], list[int]] = {}
+    for i, (k, p) in enumerate(specs):
+        order.setdefault((int(k), int(p)), []).append(i)
+    return list(order.items())
+
+
+def encode_batch(
+    specs: Sequence[tuple[int, int]],
+    payloads: Sequence,
+    *,
+    use_kernel: bool = True,
+) -> list[np.ndarray]:
+    """Encode a mixed-(K, P) batch: one launch per (K, P) cohort.
+
+    Returns the (N_i, chunk_len_i) chunk matrices in input order."""
+    if len(specs) != len(payloads):
+        raise ValueError("specs/payloads length mismatch")
+    outs: list = [None] * len(payloads)
+    for (k, p), idxs in plan_cohorts(specs):
+        codec = ECCodec(k, p, use_kernel=use_kernel)
+        for i, chunks in zip(idxs, codec.encode_many([payloads[i] for i in idxs])):
+            outs[i] = chunks
+    return outs
 
 
 def encode_item(payload: bytes, k: int, p: int, use_kernel: bool = True) -> np.ndarray:

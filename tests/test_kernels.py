@@ -84,7 +84,10 @@ class TestBitmatrix:
 
 
 class TestPallasKernel:
-    """interpret=True runs the kernel body on CPU — the correctness gate."""
+    """``pallas=True`` forces the Pallas kernel (interpret mode on CPU)
+    — the correctness gate for the kernel body itself.  Without it the
+    kernel path dispatches to the jitted XLA twin off-TPU (see
+    repro.kernels.ops), which TestXlaTwin covers."""
 
     @pytest.mark.parametrize(
         "k,p,nbytes",
@@ -101,7 +104,7 @@ class TestPallasKernel:
     def test_encode_matches_oracle(self, k, p, nbytes):
         rng = np.random.default_rng(k * 1000 + p)
         data = rng.integers(0, 256, size=(k, nbytes), dtype=np.uint8)
-        got = np.asarray(ops.encode_chunks(data, p, use_kernel=True))
+        got = np.asarray(ops.encode_chunks(data, p, use_kernel=True, pallas=True))
         want = np.asarray(ops.encode_chunks(data, p, use_kernel=False))
         np.testing.assert_array_equal(got, want)
 
@@ -109,7 +112,7 @@ class TestPallasKernel:
     def test_unaligned_sizes_padded_correctly(self, nbytes):
         rng = np.random.default_rng(nbytes)
         data = rng.integers(0, 256, size=(4, nbytes), dtype=np.uint8)
-        got = np.asarray(ops.encode_chunks(data, 2, use_kernel=True))
+        got = np.asarray(ops.encode_chunks(data, 2, use_kernel=True, pallas=True))
         want = np.asarray(ops.encode_chunks(data, 2, use_kernel=False))
         assert got.shape == (2, nbytes)
         np.testing.assert_array_equal(got, want)
@@ -118,8 +121,8 @@ class TestPallasKernel:
     def test_block_size_invariance(self, block):
         rng = np.random.default_rng(block)
         data = rng.integers(0, 256, size=(5, 4096), dtype=np.uint8)
-        a = np.asarray(ops.encode_chunks(data, 3, block_bytes=block))
-        b = np.asarray(ops.encode_chunks(data, 3, block_bytes=2048))
+        a = np.asarray(ops.encode_chunks(data, 3, block_bytes=block, pallas=True))
+        b = np.asarray(ops.encode_chunks(data, 3, block_bytes=2048, pallas=True))
         np.testing.assert_array_equal(a, b)
 
     def test_decode_kernel_matches_oracle(self):
@@ -130,13 +133,38 @@ class TestPallasKernel:
         all_chunks = gf256.gf_matmul(g, data)
         rows = np.array([0, 2, 5, 6, 7])  # mix of data+parity rows
         got = np.asarray(
-            ops.decode_chunks(all_chunks[rows], rows, k, p, use_kernel=True)
+            ops.decode_chunks(all_chunks[rows], rows, k, p,
+                              use_kernel=True, pallas=True)
         )
         want = np.asarray(
             ops.decode_chunks(all_chunks[rows], rows, k, p, use_kernel=False)
         )
         np.testing.assert_array_equal(got, want)
         np.testing.assert_array_equal(got, data)
+
+
+class TestXlaTwin:
+    """The off-TPU kernel path (jitted, tiled XLA bit-matmul) must match
+    the oracle too — it is what CPU CI times in benchmarks/fig1."""
+
+    @pytest.mark.parametrize("k,p,nbytes", [(3, 2, 2048), (6, 3, 70_000)])
+    def test_encode_matches_oracle(self, k, p, nbytes):
+        rng = np.random.default_rng(k * 7 + nbytes)
+        data = rng.integers(0, 256, size=(k, nbytes), dtype=np.uint8)
+        got = np.asarray(ops.encode_chunks(data, p, use_kernel=True, pallas=False))
+        want = np.asarray(ops.encode_chunks(data, p, use_kernel=False))
+        np.testing.assert_array_equal(got, want)
+
+    def test_tiled_width_equals_untiled(self):
+        # wide enough that the lax.map tiling path runs (> EC_TILE_BLOCKS
+        # blocks); narrow calls take the single-call branch.
+        rng = np.random.default_rng(11)
+        wide = rng.integers(
+            0, 256, size=(4, ops.EC_TILE_BLOCKS * 2048 * 5), dtype=np.uint8
+        )
+        got = np.asarray(ops.encode_chunks(wide, 2, use_kernel=True, pallas=False))
+        want = np.asarray(ops.encode_chunks(wide, 2, use_kernel=False))
+        np.testing.assert_array_equal(got, want)
 
     def test_rejects_bad_shapes(self):
         import jax.numpy as jnp
