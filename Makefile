@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify test test-fast smoke-bench bench-check bench-baseline bench-serve bench-ec
+.PHONY: verify test test-fast smoke-bench bench-check bench-baseline bench-serve bench-ec bench-scale
 
 ## Tier-1 gate: full test suite + smoke runs of the scheduling-overhead
 ## benchmark (batched place_many end to end), the Fig. 12 failure
@@ -22,7 +22,7 @@ test-fast:
 ## Smoke sweeps write to a gitignored scratch directory so `make verify`
 ## never clobbers the committed full-sweep JSON in results/benchmarks/.
 smoke-bench:
-	$(PYTHON) -m benchmarks.run --only table2,fig12,serve_load,fig1,fig13 --smoke \
+	$(PYTHON) -m benchmarks.run --only table2,fig12,serve_load,fig1,fig13,scale --smoke \
 		--out results/benchmarks/ci-smoke
 
 ## Fast lane for the streaming placement service alone: the open-loop
@@ -42,13 +42,22 @@ bench-ec:
 		--out results/benchmarks/ci-smoke \
 		--check-against results/benchmarks/smoke
 
+## Fast lane for the cluster-scale axis alone: the 10k-node top-M
+## pre-filter lane (filtered-vs-unfiltered decision-cost speedups,
+## bit-exactness, pre-filter hit rate, >= 5x acceptance floor), gated
+## against its committed smoke baseline.
+bench-scale:
+	$(PYTHON) -m benchmarks.run --only scale --smoke \
+		--out results/benchmarks/ci-smoke \
+		--check-against results/benchmarks/smoke
+
 ## Benchmark-regression gate: run the CI-sized sweeps into the scratch
 ## directory and fail if any gated decision-cost metric regressed >20%
 ## against the committed smoke baselines (results/benchmarks/smoke/).
 ## Regenerate baselines with:
-##   $(PYTHON) -m benchmarks.run --only table2,fig12,serve_load,fig1,fig13 --smoke --out results/benchmarks/smoke
+##   $(PYTHON) -m benchmarks.run --only table2,fig12,serve_load,fig1,fig13,scale --smoke --out results/benchmarks/smoke
 bench-check:
-	$(PYTHON) -m benchmarks.run --only table2,fig12,serve_load,fig1,fig13 --smoke \
+	$(PYTHON) -m benchmarks.run --only table2,fig12,serve_load,fig1,fig13,scale --smoke \
 		--out results/benchmarks/ci-smoke \
 		--check-against results/benchmarks/smoke
 
@@ -59,5 +68,5 @@ bench-check:
 ## a new machine class — then review and commit the JSON diff.  Full
 ## workflow: benchmarks/README.md.
 bench-baseline:
-	$(PYTHON) -m benchmarks.run --only table2,fig12,serve_load,fig1,fig13 --smoke \
+	$(PYTHON) -m benchmarks.run --only table2,fig12,serve_load,fig1,fig13,scale --smoke \
 		--out results/benchmarks/smoke

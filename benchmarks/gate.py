@@ -114,6 +114,23 @@ GATE_METRICS: dict[str, tuple[tuple, ...]] = {
     # min-of-reps timed and ratio-gated like table2's.  rate_60 runs
     # reject-free; rate_1500 overloads the bounded queue so its reject
     # count pins the backpressure path.
+    # Cluster-axis scale lane (benchmarks/scale_cluster.py): the
+    # pre-filtered/unfiltered speedup ratios are min-of-reps timed on
+    # 10k nodes (both sides seconds vs milliseconds — far above timer
+    # noise) and ratio-gated; decisions_match_unfiltered pins the
+    # filtered path bit-exact against the unfiltered kernel reference,
+    # and meets_5x_floor pins the acceptance floor deterministically
+    # (a silently bypassed pre-filter flips it to 0 even while the raw
+    # ratios of the bypassed path might still pass).
+    "scale": (
+        ("schedulers.drex_sc.filtered_speedup", "higher"),
+        ("schedulers.drex_lb.filtered_speedup", "higher"),
+        ("schedulers.greedy_least_used.filtered_speedup", "higher"),
+        ("schedulers.drex_sc.decisions_match_unfiltered", "equal"),
+        ("schedulers.drex_lb.decisions_match_unfiltered", "equal"),
+        ("schedulers.greedy_least_used.decisions_match_unfiltered", "equal"),
+        ("meets_5x_floor", "equal"),
+    ),
     "serve_load": (
         ("drex_sc.rate_60.placements_digest", "equal"),
         ("drex_sc.rate_60.goodput_virtual_items_per_s", "equal"),

@@ -39,6 +39,7 @@ from . import (
     fig12_failures,
     fig13_e2e_checkpoint,
     gate,
+    scale_cluster,
     serve_load,
     table2_overhead,
 )
@@ -57,6 +58,7 @@ BENCHES = {
     "fig12": fig12_failures.run,
     "fig13": fig13_e2e_checkpoint.run,
     "serve_load": serve_load.run,
+    "scale": scale_cluster.run,
 }
 
 
@@ -90,6 +92,11 @@ SMOKE_KWARGS = {
     # checked against the sequential baseline) and one overload rate
     # (deterministic backpressure), kept small enough for the PR lane.
     "serve_load": dict(n_items=240, rates=(60.0, 1500.0), reps=2),
+    # Cluster-axis scale lane: the node count stays at 10k even under
+    # --smoke (the pre-filter's >= 5x acceptance floor is only meaningful
+    # at scale); the unfiltered reference path is what costs seconds, so
+    # smoke trims reps, not N.
+    "scale": dict(reps=2),
 }
 
 

@@ -25,7 +25,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from . import greedy_kernel, lb_kernel, sc_kernel
+from . import greedy_kernel, lb_kernel, prefilter, sc_kernel
 from .incremental import FreeOrderTracker, SaturationTracker
 from .registry import (
     create_scheduler,
@@ -295,6 +295,11 @@ class GreedyMinStorage(_KernelSchedulerMixin, Scheduler):
         L = len(by_bw)
         if L < 2:
             return [Decision(None, 0, "fewer than 2 live nodes") for _ in items]
+        # No top-M pre-filter: the (size/K)*N objective keeps improving as
+        # N grows (K grows with N), so a bw-sorted prefix slice can change
+        # the argmin — MinStorage always scores the full grid (counted so
+        # the scale lane's hit-rate columns show the bypass).
+        prefilter.record(self.name, "bypassed", len(items))
         free = cluster.free_mb
         free_bw = free[by_bw]
         B = len(items)
@@ -471,15 +476,22 @@ class GreedyLeastUsed(_KernelSchedulerMixin, Scheduler):
         L = len(by_free)
         if L < 2:
             return [Decision(None, 0, "fewer than 2 live nodes") for _ in items]
-        probs_mat = np.empty((len(items), L), dtype=np.float64)
-        for row, item in enumerate(items):
-            probs_mat[row] = self._fail_probs(cluster, item, ctx)[by_free]
+        # The first-feasible-N rule makes SCAN_CAP a lossless top-M
+        # pre-filter (see core/prefilter): any N found within the prefix
+        # is the global answer, so kernel inputs are materialized over the
+        # cap slice only — decision cost scales with the cap, not L.
         cap = min(L, self.SCAN_CAP)
+        by_free_c = by_free[:cap]
+        if cap < L:
+            prefilter.record(self.name, "engaged", len(items))
+        probs_mat = np.empty((len(items), cap), dtype=np.float64)
+        for row, item in enumerate(items):
+            probs_mat[row] = self._fail_probs(cluster, item, ctx)[by_free_c]
         ok, ns, ks, ps = greedy_kernel.least_used_batch(
-            probs_mat[:, :cap],
+            probs_mat,
             np.array([it.size_mb for it in items], dtype=np.float64),
             np.array([it.reliability_target for it in items], dtype=np.float64),
-            cluster.free_mb[by_free][:cap],
+            cluster.free_mb[by_free_c],
         )
         decisions = []
         for row, item in enumerate(items):
@@ -487,6 +499,7 @@ class GreedyLeastUsed(_KernelSchedulerMixin, Scheduler):
                 if cap < L:
                     # No feasible N within the scanned prefix: finish with
                     # the scalar oracle (rare; bit-identical decision).
+                    prefilter.record(self.name, "fallback")
                     decisions.append(self._place_scalar(item, cluster, ctx))
                 else:
                     decisions.append(
@@ -503,6 +516,8 @@ class GreedyLeastUsed(_KernelSchedulerMixin, Scheduler):
                     window=ids,
                 )
             )
+        if cap < L:
+            prefilter.record(self.name, "accepted", int(np.count_nonzero(ok)))
         return decisions
 
 
@@ -561,6 +576,12 @@ class DRexLB(_KernelSchedulerMixin, Scheduler):
     #: use the kernel regardless (6-10x at 100-500 nodes).  Set to 0 to
     #: force the kernel (tests do).
     KERNEL_MIN_NODES = 256
+    #: top-M candidate pre-filter (core/prefilter): above this many live
+    #: nodes the (K, P) grid runs over the freest-PREFILTER_CAP prefix
+    #: with a per-row exactness test and unfiltered fallback.  A shapes
+    #: rung so filtered pads land on shared buckets; False disables.
+    use_prefilter = True
+    PREFILTER_CAP = prefilter.lb_cap()
 
     def __init__(self):
         #: incremental free-desc order across commit deltas; set to None
@@ -661,10 +682,51 @@ class DRexLB(_KernelSchedulerMixin, Scheduler):
         L = len(by_free)
         if L < 3:
             return [Decision(None, 0, "fewer than 3 live nodes") for _ in items]
+        cap = self.PREFILTER_CAP if self.use_prefilter else 0
+        if cap < 3 or cap >= L:  # lb_batch needs K>=2, P>=1 => m >= 3
+            return self._kernel_decisions(items, cluster, ctx, by_free, L, {})
+        # Top-M pre-filter (core/prefilter): run the (K, P) grid over the
+        # freest-M prefix; a row's answer is provably the full-grid answer
+        # iff the min parity of the whole M-prefix exceeds the P it found
+        # (frontier monotonicity makes every wider window infeasible at
+        # that P).  Rows failing the test re-run unfiltered — the lazily
+        # extended ParityFrontier makes that an incremental DP, not a
+        # restart.
+        prefilter.record(self.name, "engaged", len(items))
+        memo: dict[tuple[bytes, float], ParityFrontier] = {}
+        decisions = self._kernel_decisions(items, cluster, ctx, by_free, cap, memo)
+        fb = [i for i, d in enumerate(decisions) if d is None]
+        prefilter.record(self.name, "accepted", len(items) - len(fb))
+        if fb:
+            prefilter.record(self.name, "fallback", len(fb))
+            full = self._kernel_decisions(
+                [items[i] for i in fb], cluster, ctx, by_free, L, memo
+            )
+            for j, i in enumerate(fb):
+                decisions[i] = full[j]
+        return decisions
+
+    def _kernel_decisions(
+        self,
+        items: list[DataItem],
+        cluster: ClusterView,
+        ctx,
+        by_free: np.ndarray,
+        m: int,
+        memo: dict,
+    ) -> list[Optional[Decision]]:
+        """Grid-evaluate ``items`` over the freest-``m`` prefix of
+        ``by_free``.  When ``m < L`` (pre-filtered call) a row whose
+        sufficiency test fails yields ``None`` — the caller re-runs it
+        with ``m = L``."""
+        L = len(by_free)
+        filtered = m < L
         free_sorted = cluster.free_mb[by_free]
         # Order-sensitive global terms, host-computed exactly as the
         # scalar oracle computes them (numpy pairwise mean / reversed
-        # cumsum); the kernel consumes them as inputs.
+        # cumsum); the kernel consumes them as inputs.  f_avg and the
+        # suffix sums are cluster-global (all L nodes) even on the
+        # pre-filtered path — only the scanned grid shrinks to m.
         f_avg = float(free_sorted.mean())
         dev = np.abs(free_sorted - f_avg)
         suffix = np.concatenate([np.cumsum(dev[::-1])[::-1], [0.0]])
@@ -672,8 +734,7 @@ class DRexLB(_KernelSchedulerMixin, Scheduler):
         # (equivalence by construction; see the lb_kernel docstring).
         # Items sharing (fail probs, target) pay for one frontier per
         # batch; the BatchContext extends that across commit groups.
-        memo: dict[tuple[bytes, float], np.ndarray] = {}
-        mp_rows = np.empty((len(items), L), dtype=np.int64)
+        mp_rows = np.empty((len(items), m), dtype=np.int64)
         for row, item in enumerate(items):
             probs = self._fail_probs(cluster, item, ctx)[by_free]
             if ctx is not None:
@@ -684,17 +745,21 @@ class DRexLB(_KernelSchedulerMixin, Scheduler):
                 if fr is None:
                     fr = ParityFrontier(probs, item.reliability_target)
                     memo[key] = fr
-            mp_rows[row] = fr.upto(L)
+            mp_rows[row] = fr.upto(m)[:m]
         ok, ks, ps = lb_kernel.lb_batch(
             mp_rows,
             np.array([it.size_mb for it in items], dtype=np.float64),
-            free_sorted,
+            free_sorted[:m],
             f_avg,
-            suffix,
+            suffix[: m + 1],
         )
-        decisions = []
+        decisions: list[Optional[Decision]] = []
         for row in range(len(items)):
             if not ok[row]:
+                if filtered:
+                    # A wider-than-m window might still be feasible.
+                    decisions.append(None)
+                    continue
                 decisions.append(
                     Decision(
                         None, self._considered(L, None),
@@ -703,6 +768,16 @@ class DRexLB(_KernelSchedulerMixin, Scheduler):
                 )
                 continue
             k, p = int(ks[row]), int(ps[row])
+            if filtered:
+                # Sufficiency test: min parity of the full m-prefix (-1
+                # sentinel => > m-1, i.e. at least m) must strictly exceed
+                # the found P, else a wider window could be feasible at a
+                # P <= found (same P, lower penalty) and the slice is not
+                # provably exact.
+                mp_m = int(mp_rows[row, m - 1])
+                if (m if mp_m < 0 else mp_m) <= p:
+                    decisions.append(None)
+                    continue
             decisions.append(
                 Decision(
                     Placement(
@@ -782,6 +857,11 @@ class DRexSC(Scheduler):
 
     name = "drex_sc"
     MAX_MAPPINGS = 2**10
+    #: top-M candidate pre-filter (core/prefilter.sc_cap): above
+    #: sc_cap(MAX_MAPPINGS) live nodes, kernel inputs slice to the
+    #: freest-M prefix — exact by the start-major enumeration order.
+    #: False disables (the scale benchmark times both paths).
+    use_prefilter = True
     #: set to False to force the scalar numpy oracle even when jax is
     #: present.
     use_kernel = True
@@ -890,9 +970,24 @@ class DRexSC(Scheduler):
             return [Decision(None, 0, "fewer than 2 live nodes") for _ in items]
         live = cluster.live_ids()
         used, cap = cluster.used_mb, cluster.capacity_mb
-        probs_mat = np.empty((len(items), L), dtype=np.float64)
+        # Top-M pre-filter (core/prefilter): window enumeration under the
+        # candidate budget is start-major, so whenever it engages
+        # (L > sc_cap >= budget + 1) no enumerated window ever reaches
+        # past the first budget+1 sorted nodes — slicing kernel inputs to
+        # M is exact with no per-row test.  Cluster-global terms (the
+        # saturation baseline/system saturation below and the 1/L scale,
+        # threaded through as n_live) still use the true L.
+        M = prefilter.sc_cap(self.MAX_MAPPINGS) if self.use_prefilter else 0
+        if 0 < M < L:
+            prefilter.record(self.name, "engaged", len(items))
+            prefilter.record(self.name, "accepted", len(items))
+            by_free_k = by_free[:M]
+        else:
+            by_free_k = by_free
+        Lk = len(by_free_k)
+        probs_mat = np.empty((len(items), Lk), dtype=np.float64)
         for row, item in enumerate(items):
-            probs_mat[row] = self._fail_probs(cluster, item, ctx)[by_free]
+            probs_mat[row] = self._fail_probs(cluster, item, ctx)[by_free_k]
         # The saturation baseline and system saturation depend only on the
         # item's smin anchor; batches rarely move the running min, so
         # compute once per distinct value (numpy, bit-matching the oracle).
@@ -922,13 +1017,14 @@ class DRexSC(Scheduler):
             np.asarray(smins, dtype=np.float64),
             fbase,
             ssat,
-            cluster.free_mb[by_free],
-            cluster.write_bw[by_free],
-            cluster.read_bw[by_free],
-            used[by_free],
-            cap[by_free],
+            cluster.free_mb[by_free_k],
+            cluster.write_bw[by_free_k],
+            cluster.read_bw[by_free_k],
+            used[by_free_k],
+            cap[by_free_k],
             self.MAX_MAPPINGS,
             (tm.e0, tm.e_byte, tm.e_mult, tm.d0, tm.d_byte, tm.d_mult),
+            n_live=L,
         )
         considered = min(L * (L - 1) // 2, self.MAX_MAPPINGS)
         decisions = []

@@ -536,6 +536,7 @@ class PlacementEngine:
         for arr in (
             view.capacity_mb, view.used_mb, view.write_bw,
             view.read_bw, view.afr, view.alive,
+            view.rack, view.zone,
         ):
             arr.setflags(write=False)
         return view

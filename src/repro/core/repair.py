@@ -62,8 +62,30 @@ class RepairPlan:
 
     @property
     def repair_mb(self) -> float:
-        """Bytes that must be transferred to complete this repair."""
+        """Replacement *write* bytes (kept under the historical name —
+        the engine's ``repair_mb_committed`` gauge and the simulator's
+        ``repaired_mb`` both account committed write bytes)."""
         return self.chunk_mb * len(self.new_nodes)
+
+    @property
+    def write_mb(self) -> float:
+        """Bytes written onto replacement targets (alias of repair_mb)."""
+        return self.repair_mb
+
+    @property
+    def read_mb(self) -> float:
+        """Reconstruction *read* bytes: decoding the lost chunks streams
+        one chunk from each of K survivors.  Zero when nothing needs
+        rebuilding (no replacement targets)."""
+        if not self.new_nodes or self.placement is None:
+            return 0.0
+        return self.chunk_mb * self.placement.k
+
+    @property
+    def total_traffic_mb(self) -> float:
+        """Total repair traffic (survivor reads + replacement writes) —
+        the quantity a shared cluster-wide repair budget throttles."""
+        return self.read_mb + self.write_mb
 
 
 class RepairPlanner:
@@ -143,8 +165,11 @@ class RepairPlanner:
         if require_target:
             # Min-parity feasibility over the candidate mapping; dynamic
             # schedulers may keep buying parity nodes until Eq. 3 holds.
+            # The full-N probability table is computed once; growth steps
+            # append the single new entry instead of re-slicing O(N).
+            fail_probs = self._fail_probs(item.delta_t_days, ctx)
+            probs = fail_probs[new_map]
             while True:
-                probs = self._fail_probs(item.delta_t_days, ctx)[new_map]
                 mp = self._min_parity(probs, item.reliability_target, ctx)
                 if 0 <= mp <= placement.p + added:
                     break
@@ -153,7 +178,9 @@ class RepairPlanner:
                         "reliability target unreachable after failure",
                         considered,
                     )
-                new_map.append(remaining.pop(0))
+                nxt = remaining.pop(0)
+                new_map.append(nxt)
+                probs = np.append(probs, fail_probs[nxt])
                 added += 1
         new_nodes = tuple(n for n in new_map if n not in surv)
         return RepairPlan(

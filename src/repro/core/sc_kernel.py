@@ -234,6 +234,7 @@ def score_windows_batch(
     cap_s: np.ndarray,
     budget: int,
     tm_params: tuple,        # (e0, e_byte, e_mult, d0, d_byte, d_mult)
+    n_live: int | None = None,
 ):
     """Score every item's candidate windows against one shared snapshot.
 
@@ -241,6 +242,12 @@ def score_windows_batch(
     window start/length and EC parameters per item (undefined where
     ``ok`` is False).  Pure function of its arguments — callers own all
     cluster/scheduler state.
+
+    ``n_live`` is the true live-node count when the node arrays are a
+    top-M pre-filtered slice (see :mod:`repro.core.prefilter`): the
+    ``1/L`` / ``log L`` saturation scale is an Alg. 2 property of the
+    *cluster*, not of the slice handed to the kernel, so it must come
+    from the caller.  Defaults to the array length (unfiltered call).
     """
     if not _JAX_OK:  # callers are expected to gate on kernel_available()
         raise RuntimeError("jax unavailable; use the scalar oracle path")
@@ -265,7 +272,7 @@ def score_windows_batch(
         out[:B] = a
         return out
 
-    l_eff = max(2, L)
+    l_eff = max(2, L if n_live is None else int(n_live))
     with enable_x64():
         ok, s, n, k, p = _score_windows(
             S_pad,

@@ -27,6 +27,8 @@ class StorageNode:
     name: str = ""
     used_mb: float = 0.0
     failed: bool = False
+    rack: int = 0                      # failure domain: rack id
+    zone: int = 0                      # failure domain: zone id (racks nest in zones)
 
     @property
     def free_mb(self) -> float:        # F(S_i, t)
@@ -95,6 +97,23 @@ class ClusterView:
     read_bw: np.ndarray
     afr: np.ndarray
     alive: np.ndarray                  # bool mask
+    #: failure-domain topology: rack/zone id per node.  Optional at
+    #: construction (older call sites build the view positionally from
+    #: the six flat arrays); normalized to int64 zeros in __post_init__
+    #: so a topology-free cluster is "one rack in one zone".
+    rack: Optional[np.ndarray] = None
+    zone: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        n = int(self.capacity_mb.shape[0])
+        if self.rack is None:
+            self.rack = np.zeros(n, dtype=np.int64)
+        else:
+            self.rack = np.asarray(self.rack, dtype=np.int64)
+        if self.zone is None:
+            self.zone = np.zeros(n, dtype=np.int64)
+        else:
+            self.zone = np.asarray(self.zone, dtype=np.int64)
 
     @classmethod
     def from_nodes(cls, nodes: Sequence[StorageNode]) -> "ClusterView":
@@ -105,6 +124,8 @@ class ClusterView:
             read_bw=np.array([n.read_bw for n in nodes], dtype=np.float64),
             afr=np.array([n.annual_failure_rate for n in nodes], dtype=np.float64),
             alive=np.array([not n.failed for n in nodes], dtype=bool),
+            rack=np.array([getattr(n, "rack", 0) for n in nodes], dtype=np.int64),
+            zone=np.array([getattr(n, "zone", 0) for n in nodes], dtype=np.int64),
         )
 
     @property
@@ -141,25 +162,59 @@ class ClusterView:
         self.alive[node_id] = True
         self.used_mb[node_id] = 0.0
 
+    def nodes_in_rack(self, rack_id: int) -> np.ndarray:
+        return np.nonzero(self.rack == rack_id)[0]
+
+    def nodes_in_zone(self, zone_id: int) -> np.ndarray:
+        return np.nonzero(self.zone == zone_id)[0]
+
     def add_node(self, node: StorageNode) -> int:
         """Append a node to the view (elastic join) and return its id.
 
         Views index nodes by position, so a joining node's id is always
         the previous ``n_nodes`` regardless of the ``node_id`` recorded
-        on the :class:`StorageNode`."""
+        on the :class:`StorageNode`.
+
+        Growth is amortized O(1): each per-node field is a length-n view
+        over a geometrically doubled backing buffer, so long
+        ``node_join_schedule``s don't pay np.append's O(n) copy per join.
+        External semantics are unchanged — shape, dtype and values of the
+        exposed arrays match the old append-per-call implementation
+        exactly, and any rebinding invalidates stale mirrors by shape
+        (see ``core.incremental``'s trackers)."""
         nid = self.n_nodes
-        self.capacity_mb = np.append(self.capacity_mb, float(node.capacity_mb))
-        self.used_mb = np.append(self.used_mb, float(node.used_mb))
-        self.write_bw = np.append(self.write_bw, float(node.write_bw))
-        self.read_bw = np.append(self.read_bw, float(node.read_bw))
-        self.afr = np.append(self.afr, float(node.annual_failure_rate))
-        self.alive = np.append(self.alive, not node.failed)
+        bufs = self.__dict__.get("_growth_bufs")
+        if bufs is None:
+            bufs = {}
+            self.__dict__["_growth_bufs"] = bufs
+        for name, value in (
+            ("capacity_mb", float(node.capacity_mb)),
+            ("used_mb", float(node.used_mb)),
+            ("write_bw", float(node.write_bw)),
+            ("read_bw", float(node.read_bw)),
+            ("afr", float(node.annual_failure_rate)),
+            ("alive", not node.failed),
+            ("rack", int(getattr(node, "rack", 0))),
+            ("zone", int(getattr(node, "zone", 0))),
+        ):
+            arr = getattr(self, name)
+            buf = bufs.get(name)
+            # Only reuse a buffer the current field array is a prefix view
+            # of — anything else (fresh view, external rebinding, buffer
+            # full) reallocates with doubled headroom.
+            if buf is None or arr.base is not buf or buf.shape[0] <= nid:
+                buf = np.empty(max(4, 2 * (nid + 1)), dtype=arr.dtype)
+                buf[:nid] = arr
+                bufs[name] = buf
+            buf[nid] = value
+            setattr(self, name, buf[: nid + 1])
         return nid
 
     def copy(self) -> "ClusterView":
         return ClusterView(
             self.capacity_mb.copy(), self.used_mb.copy(), self.write_bw.copy(),
             self.read_bw.copy(), self.afr.copy(), self.alive.copy(),
+            self.rack.copy(), self.zone.copy(),
         )
 
 

@@ -8,20 +8,33 @@ The run loop is a discrete-event core over a heap of typed events:
 * **fail-stop failures** — a node dies, its chunks are lost, and every
   affected item is routed through ``PlacementEngine.plan_repair`` (§5.7:
   replacement nodes freest-first, parity growth gated on the scheduler's
-  declared capability);
+  declared capability).  Failures come in three granularities: single
+  nodes (``failure_schedule``), whole racks and whole zones
+  (``rack_failure_schedule`` / ``zone_failure_schedule`` against the
+  :class:`ClusterView`'s rack/zone topology) — a correlated event kills
+  every live node in the domain *atomically* (one void-then-replan pass
+  over the batch), so repairs never target a node that dies in the same
+  event;
 * **repair completions** — with a *finite* per-node repair bandwidth
-  (``SimConfig.repair_bw_mbps``), replacement chunks take
-  ``chunk_mb / repair_bw_mbps`` seconds to land and each node ingests
-  one repair transfer at a time, so repairs queue.  An item whose
-  surviving chunks (or replacement targets) are hit by another failure
-  while its repair is still in flight loses the repair — and is dropped
-  outright if fewer than K chunks remain.  This is the repair-rate
-  sensitivity that repair-bandwidth lower bounds (Luby et al.,
-  arXiv:2002.07904) show governs data survival; the legacy
+  (``SimConfig.repair_bw_mbps``), a repair charges traffic on both sides
+  of the reconstruction: each replacement node ingests its
+  ``chunk_mb / repair_bw_mbps`` write, and each of the K survivors
+  feeding the decode streams one chunk out through its own lane
+  (``RepairPlan.read_mb`` — at 10k nodes the read side is what a shared
+  repair fabric actually saturates).  Each node runs one repair transfer
+  at a time, so repairs queue; an optional *cluster-wide* budget
+  (``cluster_repair_bw_mbps``) additionally serializes the total
+  read+write traffic of all repairs through one shared lane.  An item
+  whose surviving chunks (or replacement targets) are hit by another
+  failure while its repair is still in flight loses the repair — and is
+  dropped outright if fewer than K chunks remain.  This is the
+  repair-rate sensitivity that repair-bandwidth lower bounds (Luby et
+  al., arXiv:2002.07904) show governs data survival; the legacy
   instantaneous-repair model is exactly the ``repair_bw_mbps=inf``
-  special case and reproduces the pre-refactor results bit-for-bit
-  (except D-Rex SC, whose saturation anchor changed intentionally with
-  the ``smin_mb`` seeding fix — see ``TestLegacyEquivalence``).
+  (and ``cluster_repair_bw_mbps=inf``) special case and reproduces the
+  pre-refactor results bit-for-bit (except D-Rex SC, whose saturation
+  anchor changed intentionally with the ``smin_mb`` seeding fix — see
+  ``TestLegacyEquivalence``).
 * **node joins / heals** — late-arriving nodes
   (``SimConfig.node_join_schedule``) grow the cluster view mid-run and
   immediately become placement/repair candidates; healed nodes
@@ -68,15 +81,28 @@ class SimConfig:
     time_model: ECTimeModel = dataclasses.field(default_factory=ECTimeModel)
     #: (day, node_id) forced fail-stop events; node_id -1 = weighted random.
     failure_schedule: tuple[tuple[float, int], ...] = ()
+    #: (day, rack_id) correlated fail-stop: every live node in the rack
+    #: dies atomically (ToR switch / PDU loss).  Rack ids come from the
+    #: cluster's ``ClusterView.rack`` topology.
+    rack_failure_schedule: tuple[tuple[float, int], ...] = ()
+    #: (day, zone_id) correlated fail-stop of a whole zone.
+    zone_failure_schedule: tuple[tuple[float, int], ...] = ()
     #: dynamic schedulers may add parity chunks when repairing (§5.7).
     allow_parity_growth: bool = True
     seed: int = 0
     #: measure per-item scheduling latency (Table 2).
     measure_overhead: bool = False
-    #: per-node repair ingest bandwidth (MB/s); each node accepts one
-    #: repair transfer at a time, so repairs queue.  ``inf`` reproduces
-    #: the legacy instantaneous-repair model exactly.
+    #: per-node repair bandwidth (MB/s); each node runs one repair
+    #: transfer at a time — replacement targets ingest their chunk write,
+    #: the K decode-source survivors stream their chunk read — so repairs
+    #: queue.  ``inf`` reproduces the legacy instantaneous-repair model
+    #: exactly (together with ``cluster_repair_bw_mbps=inf``).
     repair_bw_mbps: float = math.inf
+    #: shared cluster-wide repair budget (MB/s): the *total* read+write
+    #: traffic of every repair additionally serializes through one
+    #: cluster lane (an oversubscribed core/aggregation fabric).  ``inf``
+    #: (default) disables the shared budget.
+    cluster_repair_bw_mbps: float = math.inf
     #: (day, StorageNode) nodes joining the cluster mid-run.
     node_join_schedule: tuple[tuple[float, StorageNode], ...] = ()
     #: (day, node_id) failed nodes returning alive and empty.
@@ -106,9 +132,15 @@ class _PendingRepair:
     repair_id: int
     plan: RepairPlan
     finish_day: float
-    #: per-replacement-node transfer window (start_day, end_day) booked
-    #: on that node's repair lane — released if the repair is voided.
+    #: per-node transfer window (start_day, end_day) booked on that
+    #: node's repair lane — replacement-chunk writes on the new nodes,
+    #: decode-source reads on the first K survivors (disjoint key sets by
+    #: construction) — released if the repair is voided.
     transfers: dict[int, tuple[float, float]]
+    #: (start_day, end_day) booked on the shared cluster repair lane
+    #: (``SimConfig.cluster_repair_bw_mbps``); None when the budget is
+    #: infinite.
+    cluster_window: Optional[tuple[float, float]] = None
 
 
 @dataclasses.dataclass
@@ -139,6 +171,9 @@ class SimResult:
     n_repairs_aborted: int = 0
     #: replacement bytes actually landed by completed repairs.
     repaired_mb: float = 0.0
+    #: decode-source bytes streamed off the K survivors by completed
+    #: repairs (the read side of ``RepairPlan.total_traffic_mb``).
+    repair_read_mb: float = 0.0
 
     @property
     def stored_fraction(self) -> float:
@@ -182,12 +217,16 @@ class Simulator:
         self._repair_ids = itertools.count()
         #: day each node's repair lane frees up (finite-bandwidth mode).
         self._repair_free_at: dict[int, float] = {}
+        #: day the shared cluster repair lane frees up
+        #: (finite ``cluster_repair_bw_mbps`` mode).
+        self._cluster_lane_free_at = 0.0
         #: simulation clock: the timestamp of the event being processed.
         self._now = 0.0
         self.n_repairs_planned = 0
         self.n_repairs_completed = 0
         self.n_repairs_aborted = 0
         self.repaired_mb = 0.0
+        self.repair_read_mb = 0.0
 
     # -- store path ---------------------------------------------------------
 
@@ -235,20 +274,43 @@ class Simulator:
     # -- failure path (§5.7) --------------------------------------------------
 
     def fail_node(self, node_id: int, day: float = 0.0) -> None:
-        """Fail-stop ``node_id`` at time ``day``; plan repair (or drop)
-        for every affected item, including items whose in-flight repairs
-        this failure voids.  ``day`` is clamped to the simulation clock,
-        so direct mid-run callers can never book repair transfers in the
-        past."""
-        if node_id >= self.cluster.n_nodes or not self.cluster.alive[node_id]:
+        """Fail-stop ``node_id`` at time ``day`` (see :meth:`fail_nodes`)."""
+        self.fail_nodes([node_id], day=day)
+
+    def fail_nodes(self, node_ids: Sequence[int], day: float = 0.0) -> None:
+        """Atomically fail-stop every node in ``node_ids`` at time
+        ``day``; plan repair (or drop) for every affected item, including
+        items whose in-flight repairs the failures void.  ``day`` is
+        clamped to the simulation clock, so direct mid-run callers can
+        never book repair transfers in the past.
+
+        All deaths land *before* any replanning (this is what the
+        correlated rack/zone events rely on): a repair planned for one
+        victim can never choose another same-event victim as a
+        replacement target or decode source.  For a single node this is
+        exactly the old ``fail_node`` — same iteration order, same
+        decisions, bit-for-bit."""
+        dead: list[int] = []
+        for nid in node_ids:
+            nid = int(nid)
+            if (
+                nid >= self.cluster.n_nodes
+                or not self.cluster.alive[nid]
+                or nid in dead
+            ):
+                continue
+            dead.append(nid)
+        if not dead:
             return
         day = max(float(day), self._now)
-        self.used_mb_at_failure[node_id] = float(self.cluster.used_mb[node_id])
-        self.cluster.alive[node_id] = False
-        self.cluster.used_mb[node_id] = 0.0
-        self.n_node_failures += 1
-        # Two passes: first void every in-flight repair this failure
-        # touches (a reconstruction source or replacement target died),
+        for nid in dead:
+            self.used_mb_at_failure[nid] = float(self.cluster.used_mb[nid])
+            self.cluster.alive[nid] = False
+            self.cluster.used_mb[nid] = 0.0
+            self.n_node_failures += 1
+        dead_set = set(dead)
+        # Two passes: first void every in-flight repair these failures
+        # touch (a reconstruction source or replacement target died),
         # returning capacity reservations and unused lane time — only
         # then re-plan.  Interleaving the two would let a re-plan book a
         # lane window that a later void still occupies, leaving one lane
@@ -258,9 +320,8 @@ class Simulator:
             si = self.live_items[iid]
             pend = self._pending.get(iid)
             if pend is not None:
-                if (
-                    node_id not in pend.plan.survivors
-                    and node_id not in pend.plan.new_nodes
+                if dead_set.isdisjoint(pend.plan.survivors) and dead_set.isdisjoint(
+                    pend.plan.new_nodes
                 ):
                     continue
                 self.engine.abort_repair(pend.plan)
@@ -270,7 +331,7 @@ class Simulator:
                 affected.append(
                     (si, [n for n in pend.plan.survivors if self.cluster.alive[n]])
                 )
-            elif node_id in si.placement.node_ids:
+            elif not dead_set.isdisjoint(si.placement.node_ids):
                 affected.append((si, None))
         for si, survivors in affected:
             self._repair_or_drop(si, day, survivors=survivors)
@@ -298,27 +359,51 @@ class Simulator:
             si.placement = plan.placement
             return
         bw = self.config.repair_bw_mbps
-        if math.isinf(bw):
+        cbw = self.config.cluster_repair_bw_mbps
+        if math.isinf(bw) and math.isinf(cbw):
             # Legacy instantaneous-repair model: chunks land now.
             si.placement = plan.placement
             self.n_repairs_completed += 1
             self.repaired_mb += plan.repair_mb
+            self.repair_read_mb += plan.read_mb
             return
-        # Finite repair budget: each replacement node ingests its chunk at
-        # ``bw`` MB/s, one transfer at a time per node; the repair
-        # completes when the slowest replacement lands.  Until then the
-        # item has only its surviving chunks.
+        # Finite repair budget: both sides of the reconstruction book
+        # transfer windows, one at a time per node lane — each replacement
+        # node ingests its chunk write, each of the K decode-source
+        # survivors streams its chunk read (survivors and new nodes are
+        # disjoint, so every lane sees at most one window per repair) —
+        # and the repair completes when the slowest transfer lands.
+        # Until then the item has only its surviving chunks.
         finish = day
-        transfer_days = (si.chunk_mb / bw) / SECONDS_PER_DAY
         transfers: dict[int, tuple[float, float]] = {}
-        for n in plan.new_nodes:
-            start = max(day, self._repair_free_at.get(n, 0.0))
-            end = start + transfer_days
-            self._repair_free_at[n] = end
-            transfers[n] = (start, end)
-            finish = max(finish, end)
+        if not math.isinf(bw):
+            transfer_days = (si.chunk_mb / bw) / SECONDS_PER_DAY
+            for n in plan.new_nodes:
+                start = max(day, self._repair_free_at.get(n, 0.0))
+                end = start + transfer_days
+                self._repair_free_at[n] = end
+                transfers[n] = (start, end)
+                finish = max(finish, end)
+            for n in plan.survivors[: plan.placement.k]:
+                start = max(day, self._repair_free_at.get(n, 0.0))
+                end = start + transfer_days
+                self._repair_free_at[n] = end
+                transfers[n] = (start, end)
+                finish = max(finish, end)
+        cluster_window: Optional[tuple[float, float]] = None
+        if not math.isinf(cbw):
+            # Shared fabric: the repair's *total* read+write traffic
+            # serializes through the cluster lane on top of the per-node
+            # windows.
+            gstart = max(day, self._cluster_lane_free_at)
+            gend = gstart + (plan.total_traffic_mb / cbw) / SECONDS_PER_DAY
+            self._cluster_lane_free_at = gend
+            cluster_window = (gstart, gend)
+            finish = max(finish, gend)
         rid = next(self._repair_ids)
-        self._pending[si.item.item_id] = _PendingRepair(rid, plan, finish, transfers)
+        self._pending[si.item.item_id] = _PendingRepair(
+            rid, plan, finish, transfers, cluster_window
+        )
         self._push(finish, _P_REPAIR, ("repair", si.item.item_id, rid))
 
     def _release_lanes(self, pend: _PendingRepair, day: float) -> None:
@@ -337,6 +422,11 @@ class Simulator:
                 self._repair_free_at[n] = (
                     self._repair_free_at.get(n, 0.0) - remaining
                 )
+        if pend.cluster_window is not None:
+            start, end = pend.cluster_window
+            remaining = max(0.0, end - max(start, day))
+            if remaining > 0.0:
+                self._cluster_lane_free_at -= remaining
 
     def _drop(self, si: StoredItem, holding: Sequence[int] | None = None) -> None:
         """Permanently lose an item; ``holding`` names the nodes that
@@ -348,7 +438,14 @@ class Simulator:
                     0.0, self.cluster.used_mb[n] - si.chunk_mb
                 )
         self.dropped_mb += si.item.size_mb
-        self._pending.pop(si.item.item_id, None)
+        pend = self._pending.pop(si.item.item_id, None)
+        if pend is not None:
+            # Defensive: today every caller voids an item's in-flight
+            # repair before dropping it, but a dropped item must never
+            # keep engine reservations or phantom lane bookings alive.
+            self.engine.abort_repair(pend.plan)
+            self._release_lanes(pend, self._now)
+            self.n_repairs_aborted += 1
         del self.live_items[si.item.item_id]
 
     # -- event loop ------------------------------------------------------------
@@ -359,6 +456,10 @@ class Simulator:
     def run(self, items: Sequence[DataItem]) -> SimResult:
         for day, nid in sorted(self.config.failure_schedule):
             self._push(day, _P_FAIL, ("fail", nid))
+        for day, rid in sorted(self.config.rack_failure_schedule):
+            self._push(day, _P_FAIL, ("rack_fail", int(rid)))
+        for day, zid in sorted(self.config.zone_failure_schedule):
+            self._push(day, _P_FAIL, ("zone_fail", int(zid)))
         for day, node in sorted(
             self.config.node_join_schedule, key=lambda e: e[0]
         ):
@@ -394,6 +495,14 @@ class Simulator:
                     nid = self._draw_failing_node()
                 if nid is not None:
                     self.fail_node(int(nid), day=day)
+            elif kind in ("rack_fail", "zone_fail"):
+                domain = (
+                    self.cluster.rack if kind == "rack_fail" else self.cluster.zone
+                )
+                victims = np.nonzero(
+                    (domain == payload[1]) & self.cluster.alive
+                )[0]
+                self.fail_nodes([int(n) for n in victims], day=day)
             elif kind == "repair":
                 self._complete_repair(payload[1], payload[2])
             elif kind == "join":
@@ -427,6 +536,7 @@ class Simulator:
             n_repairs_completed=self.n_repairs_completed,
             n_repairs_aborted=self.n_repairs_aborted,
             repaired_mb=self.repaired_mb,
+            repair_read_mb=self.repair_read_mb,
         )
 
     def _complete_repair(self, item_id: int, repair_id: int) -> None:
@@ -438,6 +548,7 @@ class Simulator:
         del self._pending[item_id]
         self.n_repairs_completed += 1
         self.repaired_mb += pend.plan.repair_mb
+        self.repair_read_mb += pend.plan.read_mb
 
     def _draw_failing_node(self) -> Optional[int]:
         live = self.cluster.live_ids()

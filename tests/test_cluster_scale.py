@@ -1,0 +1,167 @@
+"""ClusterView on the cluster axis: amortized ``add_node`` growth and
+the rack/zone failure-domain topology.
+
+``add_node`` used to ``np.append`` every field (O(N) copy per join, so
+O(N^2) to grow a cluster); it now doubles backing buffers geometrically
+and hands out views.  The semantics must stay bit-for-bit what the
+append implementation produced — same values, dtypes and shapes after
+any interleaving of joins and mutations — which the reference-mirror
+test pins.  The topology tests cover defaults (one rack in one zone),
+``from_nodes`` plumbing, domain queries, and copy/snapshot isolation.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import ClusterView, DataItem, PlacementEngine, StorageNode
+
+FIELDS = (
+    "capacity_mb",
+    "used_mb",
+    "write_bw",
+    "read_bw",
+    "afr",
+    "alive",
+    "rack",
+    "zone",
+)
+
+
+def make_node(i: int, rng) -> StorageNode:
+    return StorageNode(
+        node_id=i,
+        capacity_mb=float(rng.uniform(2e3, 1e5)),
+        write_bw=float(rng.uniform(50, 400)),
+        read_bw=float(rng.uniform(50, 450)),
+        annual_failure_rate=float(rng.uniform(0.001, 0.2)),
+        used_mb=float(rng.uniform(0.0, 1e3)),
+        failed=bool(rng.integers(0, 8) == 0),
+        rack=int(i % 3),
+        zone=int(i % 2),
+    )
+
+
+def node_values(node: StorageNode) -> dict:
+    return {
+        "capacity_mb": node.capacity_mb,
+        "used_mb": node.used_mb,
+        "write_bw": node.write_bw,
+        "read_bw": node.read_bw,
+        "afr": node.annual_failure_rate,
+        "alive": not node.failed,
+        "rack": node.rack,
+        "zone": node.zone,
+    }
+
+
+class TestAddNodeGrowth:
+    def test_matches_the_append_reference_bit_for_bit(self):
+        """Grow 3 -> 60 nodes while mirroring every step with the old
+        ``np.append`` semantics; every field must match exactly after
+        every join, including interleaved occupancy/liveness mutations
+        (the buffers hand out *views*, so a mutation must land in the
+        backing store and survive subsequent growth)."""
+        rng = np.random.default_rng(0)
+        view = ClusterView.from_nodes([make_node(i, rng) for i in range(3)])
+        ref = {f: getattr(view, f).copy() for f in FIELDS}
+        for i in range(3, 60):
+            node = make_node(i, rng)
+            assert view.add_node(node) == i
+            vals = node_values(node)
+            for f in FIELDS:
+                ref[f] = np.append(
+                    ref[f], np.asarray(vals[f], dtype=ref[f].dtype)
+                )
+                got = getattr(view, f)
+                assert got.dtype == ref[f].dtype
+                assert got.shape == ref[f].shape == (i + 1,)
+                np.testing.assert_array_equal(got, ref[f], err_msg=f)
+            if i % 7 == 0:  # interleave mutations with growth
+                j = int(rng.integers(0, i + 1))
+                delta = float(rng.uniform(1.0, 50.0))
+                view.used_mb[j] += delta
+                ref["used_mb"][j] += delta
+                k = int(rng.integers(0, i + 1))
+                view.alive[k] = not view.alive[k]
+                ref["alive"][k] = not ref["alive"][k]
+        assert view.n_nodes == 60
+
+    def test_single_node_seed_grows(self):
+        rng = np.random.default_rng(1)
+        view = ClusterView.from_nodes([make_node(0, rng)])
+        for i in range(1, 10):
+            assert view.add_node(make_node(i, rng)) == i
+        assert view.n_nodes == 10
+
+    def test_copy_detaches_from_growth_buffers(self):
+        rng = np.random.default_rng(2)
+        view = ClusterView.from_nodes([make_node(i, rng) for i in range(4)])
+        view.add_node(make_node(4, rng))
+        cp = view.copy()
+        before = cp.used_mb.copy()
+        view.add_node(make_node(5, rng))
+        view.used_mb[0] += 100.0
+        assert cp.n_nodes == 5
+        np.testing.assert_array_equal(cp.used_mb, before)
+
+
+class TestTopology:
+    def test_defaults_to_single_domain(self):
+        nodes = [
+            StorageNode(
+                node_id=i,
+                capacity_mb=1e4,
+                write_bw=100.0,
+                read_bw=100.0,
+                annual_failure_rate=0.01,
+            )
+            for i in range(4)
+        ]
+        view = ClusterView.from_nodes(nodes)
+        assert view.rack.dtype == np.int64 and view.zone.dtype == np.int64
+        assert (view.rack == 0).all() and (view.zone == 0).all()
+        np.testing.assert_array_equal(view.nodes_in_rack(0), np.arange(4))
+        np.testing.assert_array_equal(view.nodes_in_zone(0), np.arange(4))
+
+    def test_from_nodes_plumbs_domains_and_queries(self):
+        rng = np.random.default_rng(3)
+        nodes = [make_node(i, rng) for i in range(8)]
+        for i, n in enumerate(nodes):
+            n.rack = i // 2  # racks {0..3}, zones {0, 1}
+            n.zone = i // 4
+        view = ClusterView.from_nodes(nodes)
+        np.testing.assert_array_equal(view.nodes_in_rack(1), [2, 3])
+        np.testing.assert_array_equal(view.nodes_in_zone(1), [4, 5, 6, 7])
+        assert view.nodes_in_rack(99).size == 0
+
+    def test_copy_is_independent(self):
+        rng = np.random.default_rng(4)
+        view = ClusterView.from_nodes([make_node(i, rng) for i in range(5)])
+        cp = view.copy()
+        cp.rack[0] = 99
+        cp.zone[1] = 99
+        assert view.rack[0] != 99 and view.zone[1] != 99
+
+    def test_view_snapshot_write_protects_topology(self):
+        rng = np.random.default_rng(5)
+        engine = PlacementEngine(
+            ClusterView.from_nodes([make_node(i, rng) for i in range(5)]),
+            "ec(3,2)",
+        )
+        snap = engine.view_snapshot()
+        with pytest.raises(ValueError):
+            snap.rack[0] = 1
+        with pytest.raises(ValueError):
+            snap.zone[0] = 1
+
+    def test_join_after_topology_keeps_domains(self):
+        rng = np.random.default_rng(6)
+        nodes = [make_node(i, rng) for i in range(4)]
+        for n in nodes:
+            n.rack, n.zone = 7, 3
+        view = ClusterView.from_nodes(nodes)
+        late = make_node(4, rng)
+        late.rack, late.zone = 8, 3
+        view.add_node(late)
+        np.testing.assert_array_equal(view.nodes_in_rack(8), [4])
+        np.testing.assert_array_equal(view.nodes_in_zone(3), np.arange(5))

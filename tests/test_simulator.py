@@ -427,3 +427,253 @@ class TestFailureTelemetry:
         items = make_trace("meva", seed=0, n_items=50, reliability=0.9)
         res = run_simulation(nodes, make_scheduler("drex_lb"), items)
         assert res.used_mb_at_failure == {}
+
+
+def _spare_sim(n_nodes=6, n_items=3, cfg=None):
+    """ec(3,2) on ``n_nodes`` most_used nodes: every item maps onto the
+    same 5-node prefix (by write bandwidth), leaving ``n_nodes - 5``
+    spares.  Returns (sim, mapped, spares)."""
+    nodes = make_node_set("most_used", 0.001)[:n_nodes]
+    sim = Simulator(nodes, make_scheduler("ec(3,2)"), cfg)
+    for i in range(n_items):
+        si, _ = sim.store(DataItem(i, 5.0, 0.0, 365.0, 0.9))
+        assert si is not None
+    mapped = sim.live_items[0].placement.node_ids
+    spares = sorted(set(range(n_nodes)) - set(mapped))
+    return sim, mapped, spares
+
+
+class TestCorrelatedFailures:
+    """Rack/zone fail-stop: every live node in the domain dies
+    *atomically* — one void-then-replan pass over the whole batch, so a
+    repair planned for one victim can never lean on another."""
+
+    def _zoned_nodes(self, n=6):
+        nodes = make_node_set("most_used", 0.001)[:n]
+        for i, node in enumerate(nodes):
+            node.rack = i // 2
+            node.zone = i // 3
+        return nodes
+
+    def test_zone_event_kills_every_live_node_in_zone(self):
+        cfg = SimConfig(zone_failure_schedule=((30.0, 0),))
+        sim = Simulator(self._zoned_nodes(), make_scheduler("ec(3,2)"), cfg)
+        items = [DataItem(i, 5.0, 0.0, 365.0, 0.9) for i in range(3)]
+        res = sim.run(items)
+        assert res.n_node_failures == 3
+        assert set(res.used_mb_at_failure) == {0, 1, 2}  # zone 0
+        assert not sim.cluster.alive[:3].any()
+        assert sim.cluster.alive[3:].all()
+
+    def test_rack_event_scopes_to_the_rack(self):
+        cfg = SimConfig(rack_failure_schedule=((30.0, 1),))
+        sim = Simulator(self._zoned_nodes(), make_scheduler("ec(3,2)"), cfg)
+        res = sim.run([DataItem(0, 5.0, 0.0, 365.0, 0.9)])
+        assert res.n_node_failures == 2
+        assert set(res.used_mb_at_failure) == {2, 3}  # rack 1
+        assert sim.cluster.alive[[0, 1, 4, 5]].all()
+
+    def test_event_on_empty_or_unknown_domain_is_a_noop(self):
+        cfg = SimConfig(rack_failure_schedule=((30.0, 99),))
+        sim = Simulator(self._zoned_nodes(), make_scheduler("ec(3,2)"), cfg)
+        res = sim.run([DataItem(0, 5.0, 0.0, 365.0, 0.9)])
+        assert res.n_node_failures == 0 and res.dropped_mb == 0.0
+
+    def test_batch_deaths_land_before_any_replanning(self):
+        """Two mapped nodes dying together yield ONE repair straight
+        onto the spares; sequential failures void the first repair
+        mid-flight (abort + replan) — the atomic batch must not."""
+
+        def build():
+            return _spare_sim(
+                n_nodes=7, n_items=1, cfg=SimConfig(repair_bw_mbps=0.001)
+            )
+
+        batch, mapped, spares = build()
+        batch.fail_nodes([mapped[0], mapped[1]], day=10.0)
+        assert batch.n_repairs_planned == 1
+        assert batch.n_repairs_aborted == 0
+        (pend,) = batch._pending.values()
+        assert set(pend.plan.new_nodes) == set(spares)
+        assert set(pend.plan.new_nodes).isdisjoint({mapped[0], mapped[1]})
+
+        seq, mapped, _ = build()
+        seq.fail_node(mapped[0], day=10.0)
+        seq.fail_node(mapped[1], day=10.001)
+        assert seq.n_repairs_aborted == 1  # first repair voided in flight
+        assert seq.n_repairs_planned == 2
+
+    def test_fail_nodes_dedupes_and_skips_dead(self):
+        nodes = make_node_set("most_used", 0.001)[:6]
+        sim = Simulator(nodes, make_scheduler("ec(3,2)"))
+        sim.fail_nodes([1, 1, 2], day=5.0)
+        assert sim.n_node_failures == 2
+        sim.fail_nodes([2, 97], day=6.0)  # dead + out of range: no-op
+        assert sim.n_node_failures == 2
+
+    def test_correlated_event_lanes_never_overlap(self):
+        # A whole zone (two mapped nodes) dies; the surviving repairs'
+        # read+write bookings must keep the one-transfer-per-lane
+        # invariant and never touch a same-event victim.
+        sim, mapped, _ = _spare_sim(
+            n_nodes=7, n_items=2, cfg=SimConfig(repair_bw_mbps=0.001)
+        )
+        for nid in (mapped[0], mapped[1]):
+            sim.cluster.zone[nid] = 1
+        victims = np.nonzero((sim.cluster.zone == 1) & sim.cluster.alive)[0]
+        sim.fail_nodes([int(n) for n in victims], day=10.0)
+        assert sim.n_node_failures == 2 and sim.n_repairs_aborted == 0
+        assert len(sim._pending) == 2
+        by_lane: dict[int, list] = {}
+        for pend in sim._pending.values():
+            assert set(pend.transfers).isdisjoint({mapped[0], mapped[1]})
+            for n, window in pend.transfers.items():
+                by_lane.setdefault(n, []).append(window)
+        for wins in by_lane.values():
+            wins.sort()
+            for (_, e0), (s1, _) in zip(wins, wins[1:]):
+                assert s1 >= e0 - 1e-12
+
+
+class TestSurvivorReadCharging:
+    """Repair economics: reconstruction charges decode-source reads on
+    the K survivors' lanes, and (optionally) the repair's total traffic
+    against a shared cluster-wide budget."""
+
+    def test_decode_reads_book_survivor_lanes(self):
+        sim, mapped, (spare,) = _spare_sim(cfg=SimConfig(repair_bw_mbps=0.001))
+        sim.fail_node(mapped[0], day=10.0)
+        T = (sim.live_items[0].chunk_mb / 0.001) / 86400.0
+        # Each repair books k=3 decode reads on the first three
+        # survivors (placement order) plus one write on the spare, and
+        # finishes when its slowest transfer lands.
+        for pend in sim._pending.values():
+            assert set(pend.transfers) == {spare, *mapped[1:4]}
+            assert pend.finish_day == pytest.approx(
+                max(end for _, end in pend.transfers.values())
+            )
+        for n in mapped[1:4]:  # three serialized reads per survivor lane
+            assert sim._repair_free_at[n] == pytest.approx(10.0 + 3 * T)
+        # The 4th survivor feeds no decode: its lane stays free.
+        assert sim._repair_free_at.get(mapped[4], 0.0) == 0.0
+
+    def test_repair_read_mb_accrues_on_completion(self):
+        sim, mapped, _ = _spare_sim(cfg=SimConfig(repair_bw_mbps=0.001))
+        sim.fail_node(mapped[0], day=10.0)
+        chunk = sim.live_items[0].chunk_mb
+        res = sim.run([])  # drain the scheduled repair completions
+        assert res.n_repairs_completed == 3
+        assert res.repaired_mb == pytest.approx(3 * chunk)  # 1 write each
+        assert res.repair_read_mb == pytest.approx(3 * chunk * 3)  # k=3 reads
+
+    def test_instant_path_accrues_reads_too(self):
+        sim, mapped, _ = _spare_sim()  # both budgets infinite
+        sim.fail_node(mapped[0], day=10.0)
+        assert sim.n_repairs_completed == 3 and not sim._pending
+        chunk = sim.live_items[0].chunk_mb
+        assert sim.repair_read_mb == pytest.approx(3 * chunk * 3)
+        assert sim.repaired_mb == pytest.approx(3 * chunk)
+
+    def test_cluster_budget_serializes_repairs(self):
+        # Per-node bandwidth infinite, shared fabric finite: the only
+        # queue is the cluster lane, which serializes each repair's
+        # total (k reads + 1 write) traffic.
+        sim, mapped, _ = _spare_sim(
+            n_items=2, cfg=SimConfig(cluster_repair_bw_mbps=0.001)
+        )
+        chunk = sim.live_items[0].chunk_mb
+        sim.fail_node(mapped[0], day=10.0)
+        assert len(sim._pending) == 2
+        T = (4 * chunk / 0.001) / 86400.0
+        wins = sorted(p.cluster_window for p in sim._pending.values())
+        assert wins[0][0] == pytest.approx(10.0)
+        assert wins[0][1] == pytest.approx(10.0 + T)
+        assert wins[1][0] == pytest.approx(wins[0][1])  # serialized
+        for pend in sim._pending.values():
+            assert pend.transfers == {}  # no per-node queueing
+            assert pend.finish_day == pytest.approx(pend.cluster_window[1])
+        assert sim._cluster_lane_free_at == pytest.approx(10.0 + 2 * T)
+
+    def test_voided_repairs_release_the_cluster_lane(self):
+        sim, mapped, _ = _spare_sim(
+            n_items=2, cfg=SimConfig(cluster_repair_bw_mbps=0.001)
+        )
+        sim.fail_node(mapped[0], day=10.0)
+        # A second failure on a shared survivor voids both repairs (the
+        # re-plans find no candidates and drop the items): the cluster
+        # lane's un-run reservations must be returned.
+        sim.fail_node(mapped[1], day=10.001)
+        assert sim.n_repairs_aborted == 2 and not sim._pending
+        assert sim._cluster_lane_free_at == pytest.approx(10.001, abs=1e-9)
+
+    def test_finite_cluster_budget_disables_instant_path(self):
+        sim, mapped, _ = _spare_sim(cfg=SimConfig(cluster_repair_bw_mbps=1e9))
+        sim.fail_node(mapped[0], day=10.0)
+        # Even a huge finite budget must go through the event loop, not
+        # the legacy instantaneous branch.
+        assert sim.n_repairs_completed == 0 and len(sim._pending) == 3
+
+
+class TestHealMidRepair:
+    """Regression (heal-mid-repair schedule): a healed node's repair
+    lane resets, and repairs voided because their replacement target
+    died leave no phantom bookings behind."""
+
+    def test_heal_resets_the_repair_lane(self):
+        sim, mapped, (spare,) = _spare_sim(cfg=SimConfig(repair_bw_mbps=0.001))
+        sim.fail_node(mapped[0], day=10.0)
+        assert sim._repair_free_at[spare] > 10.0
+        sim.fail_node(spare, day=10.001)  # the target dies: all voided
+        assert sim.n_repairs_aborted == 3 and not sim._pending
+        # Dead nodes keep their stale bookings (releases skip them)...
+        assert sim._repair_free_at[spare] > 10.0
+        sim.heal_node(spare)
+        # ...and the lane resets the moment the node returns.
+        assert sim._repair_free_at[spare] == 0.0
+
+    def test_repairs_after_heal_book_from_now_not_phantom_lane(self):
+        sim, mapped, (spare,) = _spare_sim(cfg=SimConfig(repair_bw_mbps=0.001))
+        sim.fail_node(mapped[0], day=10.0)
+        stale = sim._repair_free_at[spare]  # 10 + 3 serialized writes
+        sim.fail_node(spare, day=10.001)  # voids all 3; items drop
+        assert not sim._pending and sim.dropped_mb == pytest.approx(15.0)
+        sim.heal_node(spare)
+        sim.heal_node(mapped[0])
+        for i in range(10, 13):
+            si, _ = sim.store(DataItem(i, 5.0, 0.0, 365.0, 0.9))
+            assert si is not None
+        mapped2 = sim.live_items[10].placement.node_ids
+        assert spare not in mapped2
+        day = 10.01
+        assert day < stale  # the phantom bookings would still cover it
+        sim.fail_node(mapped2[1], day=day)
+        assert len(sim._pending) == 3
+        wins = sorted(pend.transfers[spare] for pend in sim._pending.values())
+        # Without the heal-time reset, the first write would queue
+        # behind the dead round's bookings (start == stale, not day).
+        assert wins[0][0] == pytest.approx(day)
+        for (_, e0), (s1, _) in zip(wins, wins[1:]):
+            assert s1 == pytest.approx(e0)  # serialized on the fresh lane
+        T = (sim.live_items[10].chunk_mb / 0.001) / 86400.0
+        assert sim._repair_free_at[spare] == pytest.approx(day + 3 * T)
+
+    def test_drop_with_live_pending_releases_everything(self):
+        """Defensive `_drop` path: dropping an item whose repair is
+        still in flight must abort the engine reservation and return
+        every lane booking."""
+        sim, mapped, (spare,) = _spare_sim(cfg=SimConfig(repair_bw_mbps=0.001))
+        sim.fail_node(mapped[0], day=10.0)
+        assert len(sim._pending) == 3
+        sim._now = 10.0
+        for si in list(sim.live_items.values()):
+            sim._drop(
+                si,
+                holding=[
+                    n for n in si.placement.node_ids if sim.cluster.alive[n]
+                ],
+            )
+        assert not sim._pending and sim.n_repairs_aborted == 3
+        assert sim.engine.stats["repair_mb_committed"] == pytest.approx(0.0)
+        assert sim._repair_free_at[spare] == pytest.approx(10.0, abs=1e-9)
+        for n in mapped[1:4]:
+            assert sim._repair_free_at[n] == pytest.approx(10.0, abs=1e-9)
