@@ -59,8 +59,16 @@ CAP_SCALE = 0.001  # 5-20 TB drives -> 5-20 GB (same ratios)
 
 def sim(node_set: str, dataset: str, algo: str, *, fill=0.95, reliability="random_nines",
         seed=0, failure_schedule=(), n_items=None, duration_days=None,
-        repair_bw_mbps=float("inf")):
+        repair_bw_mbps=float("inf"), n_racks=None, constraints=None,
+        repair_priority="health", rack_failure_schedule=()):
     nodes = make_node_set(node_set, capacity_scale=CAP_SCALE)
+    if n_racks:
+        # The catalog node sets carry no topology of their own; assign
+        # racks round-robin (two racks per zone) so rack-event lanes can
+        # exercise failure-domain constraints on the paper's node sets.
+        for i, n in enumerate(nodes):
+            n.rack = i % n_racks
+            n.zone = (i % n_racks) // 2
     cap = sum(n.capacity_mb for n in nodes)
     items = make_trace(
         dataset,
@@ -71,7 +79,10 @@ def sim(node_set: str, dataset: str, algo: str, *, fill=0.95, reliability="rando
         duration_days=duration_days,
     )
     cfg = SimConfig(failure_schedule=tuple(failure_schedule), seed=seed,
-                    repair_bw_mbps=repair_bw_mbps)
+                    repair_bw_mbps=repair_bw_mbps,
+                    rack_failure_schedule=tuple(rack_failure_schedule),
+                    repair_priority=repair_priority,
+                    constraints=constraints)
     t0 = time.perf_counter()
     res = run_simulation(nodes, create_scheduler(algo), items, cfg)
     wall = time.perf_counter() - t0

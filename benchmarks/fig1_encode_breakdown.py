@@ -29,6 +29,7 @@ from repro.core import shapes as core_shapes
 from repro.ec import ECCodec
 from repro.kernels import ops as kops
 from repro.storage import make_node_set
+from repro import telemetry
 from .common import csv_row, emit
 
 
@@ -105,7 +106,7 @@ def run(
                   "decode_linear_fit": {"slope": slope, "intercept": intercept,
                                         "mean_rel_err": rel_err},
                   "batched": batched,
-                  "matrix_cache": kops.matrix_cache_stats()})
+                  "matrix_cache": telemetry.snapshot().matrix_cache})
     lines.append(csv_row("fig1_linear_fit", 0.0, f"decode_fit_rel_err={rel_err:.3f}"))
     return lines
 

@@ -95,7 +95,12 @@ GATE_METRICS: dict[str, tuple[tuple, ...]] = {
     ),
     # Deterministic retained fractions: the smoke sweep's (rt, algo,
     # n_failures) cells plus the repair-bandwidth endpoints.  Seeded
-    # simulation, pure numpy — equal or the behavior changed.
+    # simulation, pure numpy — equal or the behavior changed.  The
+    # rack-event lane and the health-vs-FIFO comparison are pinned the
+    # same way, plus the two improvement metrics: the floor boolean
+    # (topology-aware >= blind AND health >= FIFO at every swept
+    # bandwidth) is equality-gated at 1, and the aggregate ratio is
+    # gated "higher" so a better scenario can raise it without churn.
     "fig12": (
         (("0.9", "drex_sc", "2"), "equal"),
         (("0.9", "drex_sc", "5"), "equal"),
@@ -105,6 +110,16 @@ GATE_METRICS: dict[str, tuple[tuple, ...]] = {
         (("0.9", "ec(3,2)", "5"), "equal"),
         (("repair_bw_sweep", "drex_sc", "inf", "retained_fraction"), "equal"),
         (("repair_bw_sweep", "drex_sc", "0.01", "retained_fraction"), "equal"),
+        (("repair_bw_sweep", "drex_sc", "0.01", "retained_fraction_fifo"),
+         "equal"),
+        (("repair_bw_sweep", "ec(3,2)", "0.01", "retained_fraction_fifo"),
+         "equal"),
+        (("rack_event", "drex_sc", "inf", "topo_retained"), "equal"),
+        (("rack_event", "drex_sc", "0.01", "topo_retained"), "equal"),
+        (("rack_event", "drex_sc", "0.01", "blind_retained"), "equal"),
+        (("rack_event", "ec(3,2)", "0.01", "topo_retained"), "equal"),
+        (("rack_event", "meets_improvement_floor"), "equal"),
+        (("rack_event", "improvement_ratio"), "higher"),
     ),
     # Streaming placement service (benchmarks/serve_load.py).  Virtual
     # quantities — placement digests, goodput on the virtual clock,
@@ -122,6 +137,9 @@ GATE_METRICS: dict[str, tuple[tuple, ...]] = {
     # and meets_5x_floor pins the acceptance floor deterministically
     # (a silently bypassed pre-filter flips it to 0 even while the raw
     # ratios of the bypassed path might still pass).
+    # The rack-event scenario pins the constrained placement path at
+    # 10k nodes: blast radius (within_parity/worst_rack_chunks) and the
+    # constrained-decisions digest are seeded and deterministic.
     "scale": (
         ("schedulers.drex_sc.filtered_speedup", "higher"),
         ("schedulers.drex_lb.filtered_speedup", "higher"),
@@ -130,6 +148,9 @@ GATE_METRICS: dict[str, tuple[tuple, ...]] = {
         ("schedulers.drex_lb.decisions_match_unfiltered", "equal"),
         ("schedulers.greedy_least_used.decisions_match_unfiltered", "equal"),
         ("meets_5x_floor", "equal"),
+        ("rack_event.within_parity", "equal"),
+        ("rack_event.worst_rack_chunks", "equal"),
+        ("rack_event.placements_digest", "equal"),
     ),
     "serve_load": (
         ("drex_sc.rate_60.placements_digest", "equal"),

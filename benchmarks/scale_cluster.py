@@ -22,17 +22,33 @@ and ``meets_5x_floor`` — the acceptance floor that every filtered
 scheduler beats the unfiltered kernel path by at least
 ``SPEEDUP_FLOOR``x, gated as a deterministic equality so a silent
 pre-filter bypass fails the gate even if the raw ratios stay green.
-The pre-filter hit-rate telemetry columns come straight from
-``prefilter.stats()``.
+The pre-filter hit-rate telemetry columns come through the
+:mod:`repro.telemetry` facade (``snapshot().prefilter``).
+
+The **rack-event scenario** checks the failure-domain constraint path
+at the same scale: a batch placed through the engine under a
+one-chunk-per-rack spread constraint, the hottest rack killed whole,
+and the blast radius asserted (no item loses more than one chunk —
+always <= P, so every item stays decodable).  ``within_parity``,
+``worst_rack_chunks`` and the constrained-placements digest are
+equality-gated.
 """
 
 from __future__ import annotations
 
+import hashlib
 import time
 
 import numpy as np
 
-from repro.core import ClusterView, DataItem, create_scheduler, prefilter
+from repro import telemetry
+from repro.core import (
+    ClusterView,
+    DataItem,
+    PlacementConstraints,
+    PlacementEngine,
+    create_scheduler,
+)
 
 from .common import csv_row, emit
 
@@ -89,6 +105,61 @@ def _best_of(fn, reps: int):
     return t_best, out
 
 
+#: rack-event scenario: items placed under a one-chunk-per-rack spread
+#: constraint at 10k nodes, then the most-loaded rack dies whole.
+_RACK_EVENT_ITEMS = 32
+_RACK_EVENT_CONSTRAINTS = PlacementConstraints(max_per_rack=1, min_racks=3)
+
+
+def _rack_event(n_nodes: int, seed: int) -> dict:
+    """Deterministic blast-radius check at scale: place a batch through
+    the engine under ``max_per_rack=1``, kill the rack holding the most
+    chunks, and verify no item loses more than one chunk (<= P, so
+    every item stays decodable).  The placements digest pins the
+    constrained decisions bit-for-bit across PRs; ``within_parity``
+    flips to 0 if the constraint path ever stops binding."""
+    cluster = synthetic_cluster(n_nodes, seed)
+    eng = PlacementEngine(
+        cluster, "drex_sc", constraints=_RACK_EVENT_CONSTRAINTS
+    )
+    items = _items(_RACK_EVENT_ITEMS, seed=2)
+    recs = [r for r in eng.place_many(items) if r.placement is not None]
+    per_rack: dict[int, int] = {}
+    worst = 0
+    within = 1
+    digest_src = []
+    for r in recs:
+        pl = r.placement
+        racks = [int(cluster.rack[n]) for n in pl.node_ids]
+        peak = max(racks.count(rk) for rk in set(racks))
+        worst = max(worst, peak)
+        if peak > pl.p:
+            within = 0
+        for rk in racks:
+            per_rack[rk] = per_rack.get(rk, 0) + 1
+        digest_src.append(
+            (r.item_id, tuple(pl.node_ids), pl.k, pl.p)
+        )
+    digest = int.from_bytes(
+        hashlib.sha256(repr(tuple(digest_src)).encode()).digest()[:8], "big"
+    )
+    hot_rack = max(per_rack, key=lambda rk: (per_rack[rk], -rk))
+    lost = [
+        sum(1 for n in r.placement.node_ids if cluster.rack[n] == hot_rack)
+        for r in recs
+    ]
+    return {
+        "n_items": _RACK_EVENT_ITEMS,
+        "n_placed": len(recs),
+        "worst_rack_chunks": worst,
+        "within_parity": within,
+        "hot_rack_max_chunks_lost": max(lost) if lost else 0,
+        "constraint_swaps": eng.stats["n_constraint_swaps"],
+        "constraint_rejects": eng.stats["n_constraint_rejects"],
+        "placements_digest": digest,
+    }
+
+
 def run(n_nodes: int = N_NODES, reps: int = 3, seed: int = 0):
     cluster = synthetic_cluster(n_nodes, seed)
     scheds: dict[str, dict] = {}
@@ -101,9 +172,9 @@ def run(n_nodes: int = N_NODES, reps: int = 3, seed: int = 0):
         # outside the timed region.
         filtered.place_batch(items, cluster)
         unfiltered.place_batch(items, cluster)
-        prefilter.reset_stats()
+        telemetry.reset(matrix_caches=False, compile_census=False)
         t_filt, got = _best_of(lambda: filtered.place_batch(items, cluster), reps)
-        stats = prefilter.stats().get(name, {})
+        stats = telemetry.snapshot().prefilter.get(name, {})
         t_unf, want = _best_of(
             lambda: unfiltered.place_batch(items, cluster), reps
         )
@@ -141,6 +212,7 @@ def run(n_nodes: int = N_NODES, reps: int = 3, seed: int = 0):
             for s in scheds.values()
         )
     )
+    rack_event = _rack_event(n_nodes, seed)
     emit(
         "scale",
         {
@@ -149,6 +221,12 @@ def run(n_nodes: int = N_NODES, reps: int = 3, seed: int = 0):
             "speedup_floor": SPEEDUP_FLOOR,
             "schedulers": scheds,
             "meets_5x_floor": meets,
+            "rack_event": rack_event,
         },
     )
     yield csv_row("scale_meets_5x_floor", 0.0, str(meets))
+    yield csv_row(
+        "scale_rack_event", 0.0,
+        f"within_parity={rack_event['within_parity']}"
+        f"_worst_rack_chunks={rack_event['worst_rack_chunks']}",
+    )

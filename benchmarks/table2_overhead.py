@@ -24,7 +24,7 @@ The ``batched_lb`` section does the same for the D-Rex LB kernel
 (repro.core.lb_kernel) at ``n_nodes`` and again at ``greedy_nodes``
 nodes; its decision-cost speedup is gated alongside SC's.  The section
 also stamps the shared shape-bucket compile-cache census
-(``repro.core.shapes.compile_cache_stats``) so recompile counts are
+(``repro.telemetry.snapshot().compile_cache``) so recompile counts are
 visible in the emitted telemetry.
 """
 
@@ -32,15 +32,16 @@ import time
 
 import numpy as np
 
+from repro import telemetry
 from repro.core import (
     BatchContext,
     ClusterView,
-    compile_cache_stats,
     DataItem,
     PlacementEngine,
     StorageNode,
     create_scheduler,
 )
+
 from .common import csv_row, emit
 
 
@@ -211,7 +212,7 @@ def _lb_scalar_vs_vectorized(
         out[point] = cols_n
     # Recompile census for the whole table2 run (all kernels share the
     # shapes bucketer; see tests/test_shapes.py for the churn budget).
-    out["compile_cache"] = compile_cache_stats()
+    out["compile_cache"] = telemetry.snapshot().compile_cache
     return out
 
 

@@ -25,17 +25,24 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from . import constraints as constraints_mod
 from . import greedy_kernel, lb_kernel, prefilter, sc_kernel
 from .incremental import FreeOrderTracker, SaturationTracker
 from .registry import (
-    create_scheduler,
     get_spec,
     register_scheduler,
     register_scheduler_family,
     SchedulerCapabilities,
 )
 from .reliability import _AUTO_EXACT_LIMIT, min_parity_for_target, ParityFrontier
-from .types import ClusterView, DataItem, Decision, ECTimeModel, Placement
+from .types import (
+    ClusterView,
+    DataItem,
+    Decision,
+    ECTimeModel,
+    Placement,
+    PlacementConstraints,
+)
 
 __all__ = [
     "Scheduler",
@@ -46,7 +53,6 @@ __all__ = [
     "StaticEC",
     "DAOSAdaptive",
     "RandomSpread",
-    "make_scheduler",
     "SCHEDULER_NAMES",
 ]
 
@@ -93,6 +99,26 @@ class Scheduler:
         ids = cluster.live_ids()
         order = np.argsort(-key[ids] if descending else key[ids], kind="stable")
         return ids[order]
+
+    @staticmethod
+    def _apply_constraints(
+        order: np.ndarray,
+        cluster: ClusterView,
+        constraints: Optional[PlacementConstraints],
+    ) -> np.ndarray:
+        """Cap-admitted subsequence of a sorted candidate order (see
+        ``core.constraints.constrained_order``).  Identity — same array
+        object — when no constraints are given, so the unconstrained
+        path stays bit-identical.  ``topology_aware`` schedulers call
+        this on their own order before any slicing: every mapping they
+        emit is then a subset of a cap-conforming set, so the per-domain
+        caps hold by construction and only spread width is left to the
+        engine's swap post-pass."""
+        if constraints is None or constraints.unconstrained:
+            return order
+        return constraints_mod.constrained_order(
+            order, cluster.rack, cluster.zone, constraints
+        )
 
     @staticmethod
     def _fits(cluster: ClusterView, node_ids, chunk_mb: float) -> bool:
@@ -162,28 +188,37 @@ class _KernelSchedulerMixin:
             self, self.KERNEL_MODULE.kernel_available(), cluster, batch
         )
 
-    def place(self, item: DataItem, cluster: ClusterView, ctx=None) -> Decision:
+    def place(
+        self, item: DataItem, cluster: ClusterView, ctx=None, constraints=None
+    ) -> Decision:
         self.observe_item(item)
         if self._kernel_wins(cluster, 1):
-            return self._place_kernel([item], cluster, ctx)[0]
-        return self._place_scalar(item, cluster, ctx)
+            return self._place_kernel([item], cluster, ctx, constraints)[0]
+        return self._place_scalar(item, cluster, ctx, constraints)
 
     def place_batch(
-        self, items: Sequence[DataItem], cluster: ClusterView, ctx=None
+        self,
+        items: Sequence[DataItem],
+        cluster: ClusterView,
+        ctx=None,
+        constraints=None,
     ) -> list[Decision]:
         """Score ``items`` against the *current* cluster snapshot in one
         vmapped kernel call (pure; consumed by the engine's batched
-        ``place_many``, which re-scores items invalidated by a commit)."""
+        ``place_many``, which re-scores items invalidated by a commit).
+        ``constraints`` (a :class:`PlacementConstraints`) restricts the
+        candidate order to the cap-admitted subsequence — only the
+        engine passes it, and only to ``topology_aware`` schedulers."""
         if self._kernel_wins(cluster, len(items)):
-            return self._place_kernel(list(items), cluster, ctx)
-        return [self._place_scalar(it, cluster, ctx) for it in items]
+            return self._place_kernel(list(items), cluster, ctx, constraints)
+        return [self._place_scalar(it, cluster, ctx, constraints) for it in items]
 
     def place_scalar(
-        self, item: DataItem, cluster: ClusterView, ctx=None
+        self, item: DataItem, cluster: ClusterView, ctx=None, constraints=None
     ) -> Decision:
         """Reference numpy oracle (kept for equivalence tests/benchmarks)."""
         self.observe_item(item)
-        return self._place_scalar(item, cluster, ctx)
+        return self._place_scalar(item, cluster, ctx, constraints)
 
 
 # ---------------------------------------------------------------------------
@@ -196,6 +231,7 @@ class _KernelSchedulerMixin:
     adaptive=True,
     supports_parity_growth=True,
     batch_scoring=True,
+    topology_aware=True,
 )
 class GreedyMinStorage(_KernelSchedulerMixin, Scheduler):
     """Minimize per-item storage footprint ``(size/K) * N`` s.t. reliability
@@ -258,9 +294,11 @@ class GreedyMinStorage(_KernelSchedulerMixin, Scheduler):
     # -- scalar oracle ------------------------------------------------------
 
     def _place_scalar(
-        self, item: DataItem, cluster: ClusterView, ctx=None
+        self, item: DataItem, cluster: ClusterView, ctx=None, constraints=None
     ) -> Decision:
-        by_bw = self._live_sorted(cluster, cluster.write_bw)
+        by_bw = self._apply_constraints(
+            self._live_sorted(cluster, cluster.write_bw), cluster, constraints
+        )
         L = len(by_bw)
         if L < 2:
             return Decision(None, 0, "fewer than 2 live nodes")
@@ -289,9 +327,11 @@ class GreedyMinStorage(_KernelSchedulerMixin, Scheduler):
     # -- vectorized path ----------------------------------------------------
 
     def _place_kernel(
-        self, items: list[DataItem], cluster: ClusterView, ctx
+        self, items: list[DataItem], cluster: ClusterView, ctx, constraints=None
     ) -> list[Decision]:
-        by_bw = self._live_sorted(cluster, cluster.write_bw)
+        by_bw = self._apply_constraints(
+            self._live_sorted(cluster, cluster.write_bw), cluster, constraints
+        )
         L = len(by_bw)
         if L < 2:
             return [Decision(None, 0, "fewer than 2 live nodes") for _ in items]
@@ -391,6 +431,7 @@ class GreedyMinStorage(_KernelSchedulerMixin, Scheduler):
     supports_parity_growth=True,
     batch_scoring=True,
     windowed_scoring=True,
+    topology_aware=True,
 )
 class GreedyLeastUsed(_KernelSchedulerMixin, Scheduler):
     """Minimize ``K+P`` s.t. reliability (Eq. 5); nodes with the highest
@@ -435,9 +476,11 @@ class GreedyLeastUsed(_KernelSchedulerMixin, Scheduler):
     SCAN_CAP = 32
 
     def _place_scalar(
-        self, item: DataItem, cluster: ClusterView, ctx=None
+        self, item: DataItem, cluster: ClusterView, ctx=None, constraints=None
     ) -> Decision:
-        by_free = self._live_sorted(cluster, cluster.free_mb)
+        by_free = self._apply_constraints(
+            self._live_sorted(cluster, cluster.free_mb), cluster, constraints
+        )
         L = len(by_free)
         if L < 2:
             return Decision(None, 0, "fewer than 2 live nodes")
@@ -470,9 +513,11 @@ class GreedyLeastUsed(_KernelSchedulerMixin, Scheduler):
         return Decision(None, considered, "no N satisfies reliability+capacity")
 
     def _place_kernel(
-        self, items: list[DataItem], cluster: ClusterView, ctx
+        self, items: list[DataItem], cluster: ClusterView, ctx, constraints=None
     ) -> list[Decision]:
-        by_free = self._live_sorted(cluster, cluster.free_mb)
+        by_free = self._apply_constraints(
+            self._live_sorted(cluster, cluster.free_mb), cluster, constraints
+        )
         L = len(by_free)
         if L < 2:
             return [Decision(None, 0, "fewer than 2 live nodes") for _ in items]
@@ -480,8 +525,18 @@ class GreedyLeastUsed(_KernelSchedulerMixin, Scheduler):
         # pre-filter (see core/prefilter): any N found within the prefix
         # is the global answer, so kernel inputs are materialized over the
         # cap slice only — decision cost scales with the cap, not L.
+        # Under constraints the slice keeps per-domain representatives
+        # (prefilter.domain_slice) so a spread width cannot be starved by
+        # the cap; it stays a free-descending subsequence, so the
+        # first-feasible scan and capacity logic are unchanged.
         cap = min(L, self.SCAN_CAP)
-        by_free_c = by_free[:cap]
+        if constraints is not None and not constraints.unconstrained:
+            by_free_c = prefilter.domain_slice(
+                by_free, cluster.rack, cluster.zone, cap, constraints, self.name
+            )
+            cap = len(by_free_c)
+        else:
+            by_free_c = by_free[:cap]
         if cap < L:
             prefilter.record(self.name, "engaged", len(items))
         probs_mat = np.empty((len(items), cap), dtype=np.float64)
@@ -500,14 +555,16 @@ class GreedyLeastUsed(_KernelSchedulerMixin, Scheduler):
                     # No feasible N within the scanned prefix: finish with
                     # the scalar oracle (rare; bit-identical decision).
                     prefilter.record(self.name, "fallback")
-                    decisions.append(self._place_scalar(item, cluster, ctx))
+                    decisions.append(
+                        self._place_scalar(item, cluster, ctx, constraints)
+                    )
                 else:
                     decisions.append(
                         Decision(None, L - 1, "no N satisfies reliability+capacity")
                     )
                 continue
             n = int(ns[row])
-            ids = tuple(int(x) for x in by_free[:n])
+            ids = tuple(int(x) for x in by_free_c[:n])
             decisions.append(
                 Decision(
                     Placement(k=int(ks[row]), p=int(ps[row]), node_ids=ids),
@@ -527,7 +584,11 @@ class GreedyLeastUsed(_KernelSchedulerMixin, Scheduler):
 
 
 @register_scheduler(
-    "drex_lb", adaptive=True, supports_parity_growth=True, batch_scoring=True
+    "drex_lb",
+    adaptive=True,
+    supports_parity_growth=True,
+    batch_scoring=True,
+    topology_aware=True,
 )
 class DRexLB(_KernelSchedulerMixin, Scheduler):
     """Balance-penalty minimization; smallest feasible parity (Alg. 1).
@@ -610,9 +671,11 @@ class DRexLB(_KernelSchedulerMixin, Scheduler):
     # -- scalar oracle ------------------------------------------------------
 
     def _place_scalar(
-        self, item: DataItem, cluster: ClusterView, ctx=None
+        self, item: DataItem, cluster: ClusterView, ctx=None, constraints=None
     ) -> Decision:
-        by_free = self._by_free(cluster)
+        by_free = self._apply_constraints(
+            self._by_free(cluster), cluster, constraints
+        )
         L = len(by_free)
         if L < 3:  # Alg. 1 needs K>=2 and P>=1
             return Decision(None, 0, "fewer than 3 live nodes")
@@ -676,13 +739,30 @@ class DRexLB(_KernelSchedulerMixin, Scheduler):
     # -- vectorized path ----------------------------------------------------
 
     def _place_kernel(
-        self, items: list[DataItem], cluster: ClusterView, ctx
+        self, items: list[DataItem], cluster: ClusterView, ctx, constraints=None
     ) -> list[Decision]:
-        by_free = self._by_free(cluster)
+        by_free = self._apply_constraints(
+            self._by_free(cluster), cluster, constraints
+        )
         L = len(by_free)
         if L < 3:
             return [Decision(None, 0, "fewer than 3 live nodes") for _ in items]
         cap = self.PREFILTER_CAP if self.use_prefilter else 0
+        if constraints is not None and 3 <= cap < L:
+            # LB's filtered grid consumes parity-frontier *prefix* rows,
+            # so the slice must stay a plain prefix (no representative
+            # promotion).  When the top-cap prefix of the admitted order
+            # cannot span the required width, run the grid unfiltered
+            # instead of starving the spread constraint.
+            sl = by_free[:cap]
+            if (
+                np.unique(cluster.rack[sl]).shape[0]
+                < min(constraints.min_racks, cap)
+                or np.unique(cluster.zone[sl]).shape[0]
+                < min(constraints.min_zones, cap)
+            ):
+                prefilter.record(self.name, "fallback", len(items))
+                cap = 0
         if cap < 3 or cap >= L:  # lb_batch needs K>=2, P>=1 => m >= 3
             return self._kernel_decisions(items, cluster, ctx, by_free, L, {})
         # Top-M pre-filter (core/prefilter): run the (K, P) grid over the
@@ -820,7 +900,11 @@ def saturation_score(projected_used_mb, capacity_mb, smin_mb, n_nodes: int = 10)
 
 
 @register_scheduler(
-    "drex_sc", adaptive=True, supports_parity_growth=True, batch_scoring=True
+    "drex_sc",
+    adaptive=True,
+    supports_parity_growth=True,
+    batch_scoring=True,
+    topology_aware=True,
 )
 class DRexSC(Scheduler):
     """System-capacity-aware scheduler (Alg. 2): Pareto front over
@@ -909,15 +993,21 @@ class DRexSC(Scheduler):
             self, sc_kernel.kernel_available(), cluster, batch
         )
 
-    def place(self, item: DataItem, cluster: ClusterView, ctx=None) -> Decision:
+    def place(
+        self, item: DataItem, cluster: ClusterView, ctx=None, constraints=None
+    ) -> Decision:
         self.observe_item(item)
         if self._kernel_wins(cluster, 1):
             smin = self.smin_mb if self.smin_mb is not None else 1.0
-            return self._place_kernel([item], [smin], cluster, ctx)[0]
-        return self._place_scalar(item, cluster, ctx)
+            return self._place_kernel([item], [smin], cluster, ctx, constraints)[0]
+        return self._place_scalar(item, cluster, ctx, constraints)
 
     def place_batch(
-        self, items: Sequence[DataItem], cluster: ClusterView, ctx=None
+        self,
+        items: Sequence[DataItem],
+        cluster: ClusterView,
+        ctx=None,
+        constraints=None,
     ) -> list[Decision]:
         """Score ``items`` against the *current* cluster snapshot in one
         vmapped kernel call.
@@ -937,23 +1027,23 @@ class DRexSC(Scheduler):
                 run = it.size_mb if run is None else min(run, it.size_mb)
             smins.append(run if run is not None else 1.0)
         if self._kernel_wins(cluster, len(items)):
-            return self._place_kernel(list(items), smins, cluster, ctx)
+            return self._place_kernel(list(items), smins, cluster, ctx, constraints)
         saved = self.smin_mb
         try:
             out = []
             for it, sm in zip(items, smins):
                 self.smin_mb = sm
-                out.append(self._place_scalar(it, cluster, ctx))
+                out.append(self._place_scalar(it, cluster, ctx, constraints))
             return out
         finally:
             self.smin_mb = saved
 
     def place_scalar(
-        self, item: DataItem, cluster: ClusterView, ctx=None
+        self, item: DataItem, cluster: ClusterView, ctx=None, constraints=None
     ) -> Decision:
         """Reference numpy oracle (kept for equivalence tests/benchmarks)."""
         self.observe_item(item)
-        return self._place_scalar(item, cluster, ctx)
+        return self._place_scalar(item, cluster, ctx, constraints)
 
     # -- vectorized path ----------------------------------------------------
 
@@ -963,12 +1053,20 @@ class DRexSC(Scheduler):
         smins: Sequence[float],
         cluster: ClusterView,
         ctx,
+        constraints=None,
     ) -> list[Decision]:
-        by_free = self._by_free(cluster)  # line 1
+        by_free = self._apply_constraints(
+            self._by_free(cluster), cluster, constraints
+        )  # line 1
         L = len(by_free)
         if L < 2:
             return [Decision(None, 0, "fewer than 2 live nodes") for _ in items]
         live = cluster.live_ids()
+        # Saturation terms stay cluster-global under constraints: the
+        # 1/L anchor and the baseline sum describe the repository, not
+        # the admissible candidate set (L_live == L when unconstrained,
+        # keeping that path bit-identical).
+        L_live = len(live)
         used, cap = cluster.used_mb, cluster.capacity_mb
         # Top-M pre-filter (core/prefilter): window enumeration under the
         # candidate budget is start-major, so whenever it engages
@@ -981,7 +1079,16 @@ class DRexSC(Scheduler):
         if 0 < M < L:
             prefilter.record(self.name, "engaged", len(items))
             prefilter.record(self.name, "accepted", len(items))
-            by_free_k = by_free[:M]
+            if constraints is not None and not constraints.unconstrained:
+                # Keep per-domain representatives in the slice (still a
+                # free-descending subsequence, so the start-major window
+                # logic below is unchanged).
+                by_free_k = prefilter.domain_slice(
+                    by_free, cluster.rack, cluster.zone, M, constraints,
+                    self.name,
+                )
+            else:
+                by_free_k = by_free[:M]
         else:
             by_free_k = by_free
         Lk = len(by_free_k)
@@ -997,13 +1104,13 @@ class DRexSC(Scheduler):
         for row, smin in enumerate(smins):
             got = base_cache.get(smin)
             if got is None:
-                f_base_sum = self._f_base_sum(cluster, smin, live, L)
+                f_base_sum = self._f_base_sum(cluster, smin, live, L_live)
                 sys_sat = float(
                     saturation_score(
                         np.array([used[live].sum()]),
                         np.array([cap[live].sum()]),
                         smin,
-                        L,
+                        L_live,
                     )[0]
                 )
                 got = (f_base_sum, sys_sat)
@@ -1024,7 +1131,7 @@ class DRexSC(Scheduler):
             cap[by_free_k],
             self.MAX_MAPPINGS,
             (tm.e0, tm.e_byte, tm.e_mult, tm.d0, tm.d_byte, tm.d_mult),
-            n_live=L,
+            n_live=L_live,
         )
         considered = min(L * (L - 1) // 2, self.MAX_MAPPINGS)
         decisions = []
@@ -1042,7 +1149,7 @@ class DRexSC(Scheduler):
                     Placement(
                         k=int(k[row]),
                         p=int(p[row]),
-                        node_ids=tuple(int(x) for x in by_free[s_r : s_r + n_r]),
+                        node_ids=tuple(int(x) for x in by_free_k[s_r : s_r + n_r]),
                     ),
                     considered,
                     "",
@@ -1053,9 +1160,11 @@ class DRexSC(Scheduler):
     # -- scalar oracle ------------------------------------------------------
 
     def _place_scalar(
-        self, item: DataItem, cluster: ClusterView, ctx=None
+        self, item: DataItem, cluster: ClusterView, ctx=None, constraints=None
     ) -> Decision:
-        by_free = self._by_free(cluster)  # line 1
+        by_free = self._apply_constraints(
+            self._by_free(cluster), cluster, constraints
+        )  # line 1
         L = len(by_free)
         if L < 2:
             return Decision(None, 0, "fewer than 2 live nodes")
@@ -1077,8 +1186,10 @@ class DRexSC(Scheduler):
         # delta of their mapped nodes (+chunk), so — like D-Rex LB's
         # balance penalty — unmapped nodes still participate and wide,
         # shallow placements are rewarded for not pushing any node toward
-        # its limit.
-        f_base_sum = self._f_base_sum(cluster, smin, live, L)
+        # its limit.  The 1/L anchor is the true live count (== L unless
+        # a constraint shortened the candidate order).
+        L_live = len(live)
+        f_base_sum = self._f_base_sum(cluster, smin, live, L_live)
         tm = self.time_model
 
         # Candidate windows as parallel arrays ((s, n) identifies the
@@ -1126,8 +1237,8 @@ class DRexSC(Scheduler):
             u = used_sorted[s : s + nmax]
             c = cap_sorted[s : s + nmax]
             delta = saturation_score(
-                u[None, :] + chunk[:, None], c[None, :], smin, L
-            ) - saturation_score(u, c, smin, L)[None, :]
+                u[None, :] + chunk[:, None], c[None, :], smin, L_live
+            ) - saturation_score(u, c, smin, L_live)[None, :]
             in_window = np.arange(nmax)[None, :] < n_arr[:, None]
             sat = f_base_sum + (delta * in_window).sum(axis=1)
             cand_cols.append(
@@ -1151,7 +1262,8 @@ class DRexSC(Scheduler):
         # line 11: system saturation over the whole repository.
         sys_sat = float(
             saturation_score(
-                np.array([used[live].sum()]), np.array([cap[live].sum()]), smin, L
+                np.array([used[live].sum()]), np.array([cap[live].sum()]), smin,
+                L_live,
             )[0]
         )
 
@@ -1338,8 +1450,3 @@ SCHEDULER_NAMES = [
 for _name in SCHEDULER_NAMES:
     get_spec(_name)
 
-
-def make_scheduler(name: str, **kwargs) -> Scheduler:
-    """Deprecated shim for the old factory; use
-    :func:`repro.core.registry.create_scheduler` (same semantics)."""
-    return create_scheduler(name, **kwargs)

@@ -40,11 +40,18 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from . import constraints as constraints_mod
 from . import greedy_kernel
 from .registry import create_scheduler, scheduler_capabilities
 from .reliability import min_parity_for_target, ParityFrontier
 from .repair import RepairPlan, RepairPlanner
-from .types import ClusterView, DataItem, Placement, StorageNode
+from .types import (
+    ClusterView,
+    DataItem,
+    Placement,
+    PlacementConstraints,
+    StorageNode,
+)
 
 __all__ = [
     "BatchContext",
@@ -195,6 +202,7 @@ class PlacementEngine:
         scheduler,
         *,
         auto_commit: bool = True,
+        constraints: Optional[PlacementConstraints] = None,
         **scheduler_kwargs,
     ):
         if isinstance(scheduler, str):
@@ -206,6 +214,12 @@ class PlacementEngine:
         self.cluster = cluster
         self.scheduler = scheduler
         self.auto_commit = auto_commit
+        # Engine-wide failure-domain constraints (normalized: the
+        # all-default record means "no constraints" and takes the exact
+        # unconstrained code path).  Per-call ``constraints=`` overrides.
+        if constraints is not None and constraints.unconstrained:
+            constraints = None
+        self.constraints = constraints
         self.capabilities = scheduler_capabilities(scheduler)
         # Legacy third-party schedulers may still implement the two-arg
         # ``place(item, cluster)``; detect once and call accordingly.
@@ -236,22 +250,63 @@ class PlacementEngine:
             "n_repairs_planned": 0,
             "n_repairs_failed": 0,
             "repair_mb_committed": 0.0,
+            # Constraint post-pass telemetry: chunks swapped to satisfy
+            # failure-domain constraints, and decisions rejected because
+            # no conforming mapping existed.
+            "n_constraint_swaps": 0,
+            "n_constraint_rejects": 0,
         }
 
     # -- placement ----------------------------------------------------------
 
-    def place(self, item: DataItem, *, ctx: BatchContext | None = None) -> PlacementRecord:
-        """Schedule (and, with ``auto_commit``, commit) one item."""
+    def place(
+        self,
+        item: DataItem,
+        *,
+        ctx: BatchContext | None = None,
+        constraints: Optional[PlacementConstraints] = None,
+    ) -> PlacementRecord:
+        """Schedule (and, with ``auto_commit``, commit) one item.
+
+        ``constraints`` overrides the engine-wide
+        :class:`PlacementConstraints` for this call.  ``topology_aware``
+        schedulers receive them directly and build cap-conforming
+        mappings by construction; for every other scheduler the swap
+        post-pass in :meth:`_finalize` enforces the invariant, so it
+        holds registry-wide."""
+        c = self._effective_constraints(constraints)
         t0 = time.perf_counter()
-        if self._pass_ctx:
+        if c is not None and self.capabilities.topology_aware:
+            decision = self.scheduler.place(
+                item, self.cluster, ctx=ctx, constraints=c
+            )
+        elif self._pass_ctx:
             decision = self.scheduler.place(item, self.cluster, ctx=ctx)
         else:
             decision = self.scheduler.place(item, self.cluster)
-        return self._finalize(item, decision, time.perf_counter() - t0)
+        return self._finalize(
+            item, decision, time.perf_counter() - t0, constraints=c, ctx=ctx
+        )
 
-    def _finalize(self, item: DataItem, decision, overhead: float) -> PlacementRecord:
+    def _effective_constraints(
+        self, constraints: Optional[PlacementConstraints]
+    ) -> Optional[PlacementConstraints]:
+        if constraints is None:
+            return self.constraints
+        return None if constraints.unconstrained else constraints
+
+    def _finalize(
+        self,
+        item: DataItem,
+        decision,
+        overhead: float,
+        constraints: Optional[PlacementConstraints] = None,
+        ctx: BatchContext | None = None,
+    ) -> PlacementRecord:
         """Turn a scheduler decision into a committed record + telemetry."""
         self.stats["overhead_s"] += overhead
+        if decision.placement is not None and constraints is not None:
+            decision = self._enforce_constraints(item, decision, constraints, ctx)
         if decision.placement is None:
             self.stats["n_rejected"] += 1
             return PlacementRecord(
@@ -265,7 +320,7 @@ class PlacementEngine:
             )
         pl = decision.placement
         chunk = pl.chunk_size_mb(item.size_mb)
-        self._validate(pl, chunk)
+        self._validate(pl, chunk, constraints)
         committed = False
         if self.auto_commit:
             self.cluster.commit(pl, chunk)
@@ -285,12 +340,67 @@ class PlacementEngine:
             committed=committed,
         )
 
+    def _enforce_constraints(
+        self,
+        item: DataItem,
+        decision,
+        constraints: PlacementConstraints,
+        ctx: BatchContext | None,
+    ):
+        """Constraint-repair post-pass (see ``core.constraints``).
+
+        ``topology_aware`` schedulers arrive here already cap-conforming
+        (their candidate orders are cap-admitted), so the swap pass only
+        ever fires for spread width — and, for non-declaring schedulers,
+        for everything.  A mapping that cannot be repaired (no admissible
+        swap, or the swapped mapping would miss Eq. 3 at the original
+        parity) becomes a rejection rather than a constraint violation.
+        A swap invalidates ``Decision.window`` (the score's provenance no
+        longer matches the mapping), so rescoring stays sound."""
+        pl = decision.placement
+        if constraints.satisfied_by(pl.node_ids, self.cluster.rack, self.cluster.zone):
+            return decision
+        chunk = pl.chunk_size_mb(item.size_mb)
+        if ctx is not None:
+            fail_probs = ctx.fail_probs(self.cluster, item.delta_t_days)
+
+            def mp(probs: np.ndarray) -> int:
+                return ctx.min_parity(probs, item.reliability_target)
+
+        else:
+            fail_probs = self.cluster.fail_probs(item.delta_t_days)
+
+            def mp(probs: np.ndarray) -> int:
+                got = min_parity_for_target(probs, item.reliability_target)
+                return -1 if got is None else int(got)
+
+        repaired = constraints_mod.repair_mapping(
+            pl, self.cluster, constraints, chunk,
+            min_parity=mp, fail_probs=fail_probs,
+        )
+        if repaired is None:
+            self.stats["n_constraint_rejects"] += 1
+            return dataclasses.replace(
+                decision,
+                placement=None,
+                window=None,
+                reason="failure-domain constraints unsatisfiable for this item",
+            )
+        new_pl, swaps = repaired
+        if swaps == 0:
+            return decision
+        self.stats["n_constraint_swaps"] += swaps
+        return dataclasses.replace(
+            decision, placement=new_pl, window=None
+        )
+
     def place_many(
         self,
         items: Sequence[DataItem],
         *,
         atomic: bool = False,
         ctx: BatchContext | None = None,
+        constraints: Optional[PlacementConstraints] = None,
     ) -> list[PlacementRecord]:
         """Place a batch in arrival order under one shared context.
 
@@ -315,6 +425,7 @@ class PlacementEngine:
         With ``atomic=True`` the whole batch is rolled back if any item
         is rejected (records then carry ``committed=False``).
         """
+        c = self._effective_constraints(constraints)
         ctx = ctx or BatchContext()
         snap = self.snapshot()
         records: list[PlacementRecord] = []
@@ -323,10 +434,10 @@ class PlacementEngine:
         )
         try:
             if batched:
-                records = self._place_many_batched(list(items), ctx)
+                records = self._place_many_batched(list(items), ctx, c)
             else:
                 for item in items:
-                    records.append(self.place(item, ctx=ctx))
+                    records.append(self.place(item, ctx=ctx, constraints=c))
         except Exception:
             self.rollback(snap)
             raise
@@ -342,7 +453,10 @@ class PlacementEngine:
     MAX_SCORING_GROUP = 64
 
     def _place_many_batched(
-        self, items: list[DataItem], ctx: BatchContext
+        self,
+        items: list[DataItem],
+        ctx: BatchContext,
+        constraints: Optional[PlacementConstraints] = None,
     ) -> list[PlacementRecord]:
         """Batch placement via ``Scheduler.place_batch``.
 
@@ -388,7 +502,12 @@ class PlacementEngine:
                 else None
             )
             t0 = time.perf_counter()
-            decisions = self.scheduler.place_batch(group, self.cluster, ctx=ctx)
+            if constraints is not None and self.capabilities.topology_aware:
+                decisions = self.scheduler.place_batch(
+                    group, self.cluster, ctx=ctx, constraints=constraints
+                )
+            else:
+                decisions = self.scheduler.place_batch(group, self.cluster, ctx=ctx)
             elapsed = time.perf_counter() - t0
             if len(decisions) != len(group):
                 raise RuntimeError(
@@ -415,7 +534,12 @@ class PlacementEngine:
                 # only as its decision is consumed (matching sequential
                 # place, where observation precedes the item's scoring).
                 self.scheduler.observe_item(item)
-                records.append(self._finalize(item, decision, per_item))
+                records.append(
+                    self._finalize(
+                        item, decision, per_item,
+                        constraints=constraints, ctx=ctx,
+                    )
+                )
                 used += 1
                 if records[-1].committed:
                     committed_nodes.update(records[-1].placement.node_ids)
@@ -467,6 +591,7 @@ class PlacementEngine:
         require_target: bool = True,
         commit: bool | None = None,
         ctx: BatchContext | None = None,
+        constraints: Optional[PlacementConstraints] = None,
     ) -> RepairPlan:
         """Plan (and, with ``commit``, reserve) re-placement of an item's
         lost chunks — the one repair policy in the codebase (§5.7).
@@ -490,6 +615,7 @@ class PlacementEngine:
             allow_parity_growth=grow,
             require_target=require_target,
             ctx=ctx,
+            constraints=self._effective_constraints(constraints),
         )
         plan = dataclasses.replace(
             plan, overhead_s=time.perf_counter() - t0
@@ -580,7 +706,12 @@ class PlacementEngine:
 
     # -- internal -------------------------------------------------------------
 
-    def _validate(self, pl: Placement, chunk: float) -> None:
+    def _validate(
+        self,
+        pl: Placement,
+        chunk: float,
+        constraints: Optional[PlacementConstraints] = None,
+    ) -> None:
         ids = np.asarray(pl.node_ids)
         if not np.all(self.cluster.alive[ids]):
             raise RuntimeError(
@@ -589,6 +720,15 @@ class PlacementEngine:
         if not np.all(self.cluster.free_mb[ids] >= chunk - 1e-6):
             raise RuntimeError(
                 f"{self.scheduler.name} violated capacity ({chunk:.3f} MB chunk)"
+            )
+        if constraints is not None and not constraints.satisfied_by(
+            pl.node_ids, self.cluster.rack, self.cluster.zone
+        ):
+            # Post-pass guarantees conformance before commit; reaching
+            # here means a scheduler/post-pass bug, not user input.
+            raise RuntimeError(
+                f"{self.scheduler.name} violated failure-domain constraints: "
+                f"{pl.node_ids}"
             )
 
 

@@ -53,6 +53,17 @@ Everything runs in float64 under a scoped ``jax.experimental.enable_x64``
 is unavailable the callers fall back to the scalar oracles.  Pad
 planning goes through :mod:`repro.core.shapes` (shared hysteresis-banded
 buckets + compile-cache census).
+
+**Failure-domain constraints.**  Under ``PlacementConstraints`` both
+greedy schedulers hand these kernels the cap-admitted subsequence of
+their own sorted orders (``core.constraints.constrained_order``;
+GreedyLeastUsed's ``SCAN_CAP`` slice additionally keeps per-domain
+representatives via ``prefilter.domain_slice``).  Prefixes of an
+admitted order are subsets of a cap-conforming set, so the in-kernel
+scans are unchanged and greedy admission is WLOG for prefix-greedy
+rules: any excluded node is dominated, under the scheduler's sort key,
+by the cap's worth of same-domain nodes before it.  Unconstrained calls
+pass identical arrays (bit-identical decisions).
 """
 
 from __future__ import annotations

@@ -59,6 +59,17 @@ Everything runs in float64 under a scoped ``jax.experimental.enable_x64``
 unavailable the callers fall back to the scalar oracle.  Pad planning
 goes through :mod:`repro.core.shapes` (shared hysteresis-banded buckets
 + compile-cache census).
+
+**Failure-domain constraints.**  Under ``PlacementConstraints`` the
+free-descending node order handed to the grid is the cap-admitted
+subsequence (``core.constraints.constrained_order``): every (K, P)
+prefix of it is a subset of a cap-conforming set, so the grid math is
+untouched.  Because the frontier's prefix rows must remain *plain*
+prefixes of the scored order, the top-M pre-filter is bypassed (not
+domain-sliced) whenever its prefix cannot span a required spread width
+— correctness first, the filter is only ever a fast path.
+Unconstrained calls pass the identical arrays as before (bit-identical
+decisions).
 """
 
 from __future__ import annotations

@@ -49,11 +49,14 @@ from __future__ import annotations
 
 import threading
 
+import numpy as np
+
 from . import shapes
 
 __all__ = [
     "sc_cap",
     "lb_cap",
+    "domain_slice",
     "record",
     "stats",
     "reset_stats",
@@ -65,7 +68,7 @@ __all__ = [
 #: filter never engages.
 LB_CAP_DEFAULT = 256
 
-_EVENTS = ("engaged", "accepted", "fallback", "bypassed")
+_EVENTS = ("engaged", "accepted", "fallback", "bypassed", "promoted")
 
 _lock = threading.Lock()
 _counters: dict[str, dict[str, int]] = {}
@@ -82,6 +85,66 @@ def lb_cap() -> int:
     """Default top-M cap for D-Rex LB (``LB_CAP_DEFAULT`` rounded up to
     a shapes rung so the filtered grid lands on a bucketed pad)."""
     return shapes.rung(LB_CAP_DEFAULT)
+
+
+def domain_slice(
+    order: np.ndarray,
+    rack: np.ndarray,
+    zone: np.ndarray,
+    m: int,
+    constraints,
+    scheduler: str | None = None,
+) -> np.ndarray:
+    """Top-``m`` slice of a sorted candidate order with per-domain
+    representatives: the slice keeps at least one node from enough
+    distinct racks/zones to meet the spread width of ``constraints``
+    (when the full order can), so the top-M pre-filter cannot starve a
+    spread constraint into the engine's swap post-pass.
+
+    Greedy and deterministic: first pick the earliest occurrence of each
+    of the first ``min(min_racks, m)`` distinct racks (then zones, while
+    slots remain), then fill with the earliest unpicked nodes.  The
+    result is sorted by original position — a *subsequence* of ``order``,
+    so a free-descending input stays free-descending and window/prefix
+    capacity logic downstream stays valid.  When the plain ``order[:m]``
+    slice already spans enough domains, the result is exactly that slice
+    (bit-identical fast path); promotions are counted under the
+    ``promoted`` telemetry event.
+    """
+    order = np.asarray(order)
+    length = order.shape[0]
+    if length <= m or constraints is None:
+        return order
+    need_r = min(int(constraints.min_racks), m)
+    need_z = min(int(constraints.min_zones), m)
+    if need_r <= 1 and need_z <= 1:
+        return order[:m]
+    picked: list[int] = []          # positions in `order`
+    picked_set: set[int] = set()
+    for axis, need in ((rack, need_r), (zone, need_z)):
+        seen: set[int] = {int(axis[order[pos]]) for pos in picked}
+        pos = 0
+        while len(seen) < need and pos < length and len(picked) < m:
+            d = int(axis[order[pos]])
+            if d not in seen:
+                seen.add(d)
+                if pos not in picked_set:
+                    picked.append(pos)
+                    picked_set.add(pos)
+            pos += 1
+    pos = 0
+    while len(picked) < m:
+        if pos not in picked_set:
+            picked.append(pos)
+            picked_set.add(pos)
+        pos += 1
+    picked.sort()
+    n_promoted = sum(1 for pos in picked if pos >= m)
+    if n_promoted and scheduler is not None:
+        record(scheduler, "promoted", n_promoted)
+    if not n_promoted:
+        return order[:m]
+    return order[np.asarray(picked, dtype=np.int64)]
 
 
 def record(scheduler: str, event: str, n: int = 1) -> None:

@@ -39,6 +39,7 @@ __all__ = [
     "get_spec",
     "scheduler_names",
     "scheduler_capabilities",
+    "find",
 ]
 
 
@@ -65,6 +66,14 @@ class SchedulerCapabilities:
     #: (core/greedy_kernel) and D-Rex LB (core/lb_kernel); the scalar
     #: paths survive as the equivalence oracles (``place_scalar``).
     batch_scoring: bool = False
+    #: consumes :class:`~repro.core.types.PlacementConstraints`: ``place``
+    #: / ``place_batch`` accept a ``constraints=`` keyword and build their
+    #: candidate orders through ``core.constraints.constrained_order`` (and
+    #: ``prefilter.domain_slice``), so per-domain caps hold by construction
+    #: and the engine's swap post-pass only ever has to enforce spread.
+    #: Non-declaring schedulers never receive the keyword; the engine
+    #: repairs their mappings with the post-pass instead.
+    topology_aware: bool = False
     #: ``place_batch`` decisions carry a ``Decision.window`` naming the
     #: node ids their score depends on, and the decision is a pure
     #: function of (item, failure probs, the free-desc order of live
@@ -98,6 +107,7 @@ def register_scheduler(
     randomized: bool = False,
     batch_scoring: bool = False,
     windowed_scoring: bool = False,
+    topology_aware: bool = False,
     doc: str = "",
 ):
     """Class/factory decorator adding one named algorithm to the registry.
@@ -112,6 +122,7 @@ def register_scheduler(
         randomized=randomized,
         batch_scoring=batch_scoring,
         windowed_scoring=windowed_scoring,
+        topology_aware=topology_aware,
     )
 
     def deco(factory):
@@ -138,6 +149,7 @@ def register_scheduler_family(
     randomized: bool = False,
     batch_scoring: bool = False,
     windowed_scoring: bool = False,
+    topology_aware: bool = False,
     doc: str = "",
 ):
     """Register a parameterized family, e.g. ``ec(K,P)``.
@@ -152,6 +164,7 @@ def register_scheduler_family(
         randomized=randomized,
         batch_scoring=batch_scoring,
         windowed_scoring=windowed_scoring,
+        topology_aware=topology_aware,
     )
 
     def deco(factory):
@@ -202,6 +215,37 @@ def create_scheduler(name: str, **kwargs):
 def scheduler_names() -> list[str]:
     """All names registered so far (family members appear once resolved)."""
     return sorted(_REGISTRY)
+
+
+def find(
+    capabilities: Optional[dict] = None, **flags: bool
+) -> list[SchedulerSpec]:
+    """Query the registry by capability flags instead of poking classes.
+
+    Each given flag must match the spec's declared value exactly; flags
+    left out do not filter.  ``capabilities`` may be passed as a dict
+    (``find(capabilities={"topology_aware": True})``) or as keyword
+    flags (``find(topology_aware=True, batch_scoring=True)``).  Only
+    concrete registrations are searched — family patterns (``ec(K,P)``)
+    appear once a member has been resolved.  Results are name-sorted for
+    deterministic sweeps (the invariant harness iterates this).
+    """
+    wanted = dict(capabilities or {})
+    wanted.update(flags)
+    valid = {f.name for f in dataclasses.fields(SchedulerCapabilities)}
+    unknown = set(wanted) - valid
+    if unknown:
+        raise ValueError(
+            f"unknown capability flags {sorted(unknown)}; valid: {sorted(valid)}"
+        )
+    return [
+        spec
+        for _, spec in sorted(_REGISTRY.items())
+        if all(
+            getattr(spec.capabilities, flag) == want
+            for flag, want in wanted.items()
+        )
+    ]
 
 
 def scheduler_capabilities(scheduler) -> SchedulerCapabilities:

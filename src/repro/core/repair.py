@@ -35,7 +35,7 @@ from typing import Optional, Sequence
 import numpy as np
 
 from .reliability import min_parity_for_target
-from .types import ClusterView, DataItem, Placement
+from .types import ClusterView, DataItem, Placement, PlacementConstraints
 
 __all__ = ["RepairPlan", "RepairPlanner"]
 
@@ -104,6 +104,7 @@ class RepairPlanner:
         allow_parity_growth: bool = False,
         require_target: bool = True,
         ctx=None,
+        constraints: Optional[PlacementConstraints] = None,
     ) -> RepairPlan:
         """Plan replacements for ``placement``'s lost chunks.
 
@@ -115,6 +116,15 @@ class RepairPlanner:
         skips the reliability-feasibility loop (best-effort repair with
         the old (K, P) kept — the checkpoint plane's mode, where group
         health is reported separately).
+
+        ``constraints`` (failure-domain caps + spread) shape replacement
+        selection: a candidate is only taken while it keeps every capped
+        domain within its cap *given the surviving chunks*, and while a
+        spread width is unmet candidates from unrepresented domains are
+        preferred.  Survivors hold data and are never moved, so a
+        pre-constraint mapping that already violates a cap keeps its
+        violation (repair never makes it worse) — cap-conforming inputs
+        stay cap-conforming, which is what the invariant harness pins.
         """
         cluster = self.cluster
         chunk = (
@@ -159,8 +169,18 @@ class RepairPlanner:
                 f"{len(candidates)} fit",
                 considered,
             )
-        new_map = surv + candidates[:lost]
-        remaining = candidates[lost:]
+        if constraints is not None and not constraints.unconstrained:
+            new_map, remaining = self._select_constrained(
+                surv, candidates, lost, placement.n, constraints
+            )
+            if new_map is None:
+                return infeasible(
+                    "no replacement satisfies failure-domain constraints",
+                    considered,
+                )
+        else:
+            new_map = surv + candidates[:lost]
+            remaining = candidates[lost:]
         added = 0
         if require_target:
             # Min-parity feasibility over the candidate mapping; dynamic
@@ -178,7 +198,16 @@ class RepairPlanner:
                         "reliability target unreachable after failure",
                         considered,
                     )
-                nxt = remaining.pop(0)
+                if constraints is not None and not constraints.unconstrained:
+                    nxt = self._pop_admissible(new_map, remaining, constraints)
+                    if nxt is None:
+                        return infeasible(
+                            "reliability target unreachable within "
+                            "failure-domain constraints",
+                            considered,
+                        )
+                else:
+                    nxt = remaining.pop(0)
                 new_map.append(nxt)
                 probs = np.append(probs, fail_probs[nxt])
                 added += 1
@@ -195,6 +224,88 @@ class RepairPlanner:
             considered,
             "",
         )
+
+    # -- failure-domain constraint selection ----------------------------------
+
+    def _admissible(
+        self, node: int, chosen: list[int], c: PlacementConstraints
+    ) -> bool:
+        """Would adding ``node`` keep every capped domain within its cap?"""
+        cluster = self.cluster
+        for axis, cap in (
+            (cluster.rack, c.max_per_rack),
+            (cluster.zone, c.max_per_zone),
+        ):
+            if cap is None:
+                continue
+            d = int(axis[node])
+            if sum(1 for i in chosen if int(axis[i]) == d) + 1 > cap:
+                return False
+        return True
+
+    def _pop_admissible(
+        self, chosen: list[int], remaining: list[int], c: PlacementConstraints
+    ) -> Optional[int]:
+        for idx, cand in enumerate(remaining):
+            if self._admissible(cand, chosen, c):
+                return remaining.pop(idx)
+        return None
+
+    def _select_constrained(
+        self,
+        surv: list[int],
+        candidates: list[int],
+        lost: int,
+        n_final: int,
+        c: PlacementConstraints,
+    ) -> tuple[Optional[list[int]], list[int]]:
+        """Freest-first replacement selection under caps, preferring
+        unrepresented domains while a spread width is unmet (racks
+        first — they nest in zones, so widening racks usually widens
+        zones for free)."""
+        cluster = self.cluster
+        chosen = list(surv)
+        pool = list(candidates)
+        need_r = min(c.min_racks, n_final)
+        need_z = min(c.min_zones, n_final)
+        for _ in range(lost):
+            racks = {int(cluster.rack[i]) for i in chosen}
+            zones = {int(cluster.zone[i]) for i in chosen}
+            pick = None
+            if len(racks) < need_r:
+                pick = next(
+                    (
+                        cand
+                        for cand in pool
+                        if int(cluster.rack[cand]) not in racks
+                        and self._admissible(cand, chosen, c)
+                    ),
+                    None,
+                )
+            if pick is None and len(zones) < need_z:
+                pick = next(
+                    (
+                        cand
+                        for cand in pool
+                        if int(cluster.zone[cand]) not in zones
+                        and self._admissible(cand, chosen, c)
+                    ),
+                    None,
+                )
+            if pick is None:
+                pick = next(
+                    (
+                        cand
+                        for cand in pool
+                        if self._admissible(cand, chosen, c)
+                    ),
+                    None,
+                )
+            if pick is None:
+                return None, pool
+            chosen.append(pick)
+            pool.remove(pick)
+        return chosen, pool
 
     # -- shared-kernel shims (context-optional) -------------------------------
 

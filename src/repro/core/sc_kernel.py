@@ -23,6 +23,17 @@ Everything runs in float64 under a scoped ``jax.experimental.enable_x64``
 cannot represent), so the kernel is decision-equivalent to the numpy
 oracle; tests/test_sc_vectorized.py enforces this bit-for-bit on pinned
 traces.  When jax is unavailable the callers fall back to the oracle.
+
+**Failure-domain constraints.**  Under ``PlacementConstraints`` the
+candidate-node axis arrives already masked: ``DRexSC`` feeds the kernel
+the cap-admitted subsequence of its free-descending order
+(``core.constraints.constrained_order``, with per-domain
+representatives kept by ``prefilter.domain_slice``), so every
+enumerated window is a subset of a cap-conforming set and the in-kernel
+math — including the saturation scale, which stays anchored to the
+*cluster-wide* live count via ``n_live`` — is unchanged.  Unconstrained
+calls pass the identical arrays as before, keeping decisions
+bit-identical to the pinned goldens.
 """
 
 from __future__ import annotations

@@ -281,6 +281,68 @@ class ECTimeModel:
 
 
 @dataclasses.dataclass(frozen=True)
+class PlacementConstraints:
+    """Failure-domain constraints on a mapping (rack/zone topology).
+
+    A mapping satisfies the constraints when no more than ``max_per_rack``
+    of its chunks share a rack, no more than ``max_per_zone`` share a
+    zone, and the mapping spans at least ``min(min_racks, n)`` distinct
+    racks and ``min(min_zones, n)`` distinct zones (the ``min`` keeps
+    small mappings satisfiable: a 2-chunk mapping cannot span 3 racks).
+
+    ``None`` caps are unlimited; the all-default instance is
+    :attr:`unconstrained` and must behave exactly like passing no
+    constraints at all.  With ``max_per_rack <= P`` a single rack event
+    destroys at most P chunks of any conforming item, which keeps the
+    item decodable — the durability contract the invariant harness pins.
+    """
+
+    max_per_rack: Optional[int] = None
+    max_per_zone: Optional[int] = None
+    min_racks: int = 1
+    min_zones: int = 1
+
+    def __post_init__(self):
+        for label, v in (("max_per_rack", self.max_per_rack),
+                         ("max_per_zone", self.max_per_zone)):
+            if v is not None and v < 1:
+                raise ValueError(f"{label} must be >= 1 or None, got {v}")
+        if self.min_racks < 1 or self.min_zones < 1:
+            raise ValueError("min_racks/min_zones must be >= 1")
+
+    @property
+    def unconstrained(self) -> bool:
+        return (
+            self.max_per_rack is None
+            and self.max_per_zone is None
+            and self.min_racks <= 1
+            and self.min_zones <= 1
+        )
+
+    def satisfied_by(
+        self, node_ids: Sequence[int], rack: np.ndarray, zone: np.ndarray
+    ) -> bool:
+        """Whether a mapping meets caps and spread under this topology."""
+        ids = np.asarray(list(node_ids), dtype=np.int64)
+        n = ids.shape[0]
+        if n == 0:
+            return True
+        racks = rack[ids]
+        zones = zone[ids]
+        if self.max_per_rack is not None:
+            if np.bincount(racks - racks.min()).max() > self.max_per_rack:
+                return False
+        if self.max_per_zone is not None:
+            if np.bincount(zones - zones.min()).max() > self.max_per_zone:
+                return False
+        if np.unique(racks).shape[0] < min(self.min_racks, n):
+            return False
+        if np.unique(zones).shape[0] < min(self.min_zones, n):
+            return False
+        return True
+
+
+@dataclasses.dataclass(frozen=True)
 class Decision:
     """Result of one scheduling call."""
 

@@ -29,8 +29,15 @@ against when failures/joins interleave with arrivals — exactly the
 mid-window churn the service must absorb.  Failures route every affected
 stored item through ``engine.plan_repair`` (the instantaneous
 placement-plane model, matching ``Simulator._repair_or_drop`` with
-infinite repair bandwidth); unrecoverable items release their surviving
-chunks and are counted lost — never silently.
+infinite repair bandwidth), most-degraded first by
+surviving-chunks-minus-K margin (the simulator's health priority);
+unrecoverable items release their surviving chunks and are counted
+lost — never silently.
+
+Failure-domain awareness comes for free from the engine: construct the
+``PlacementEngine`` with :class:`~repro.core.types.PlacementConstraints`
+and every placement and repair the frontier makes — including the
+post-failure replans — honors the rack/zone caps and spread width.
 """
 
 from __future__ import annotations
@@ -349,6 +356,17 @@ class PlacementFrontier:
         affected = [
             si for si in self.stored.values() if node_id in si.placement.node_ids
         ]
+        # Health-prioritized replanning (same policy as the simulator's
+        # repair queue): most-degraded first by surviving-chunks-minus-K
+        # margin, deterministic item-id tie-break — replacement capacity
+        # goes to the items nearest data loss.
+        affected.sort(
+            key=lambda si: (
+                sum(1 for n in si.placement.node_ids if cluster.alive[n])
+                - si.placement.k,
+                si.item.item_id,
+            )
+        )
         for si in affected:
             self._repair_or_drop(si)
         self.epochs.publish(self.engine, t)

@@ -14,7 +14,11 @@ The run loop is a discrete-event core over a heap of typed events:
   :class:`ClusterView`'s rack/zone topology) — a correlated event kills
   every live node in the domain *atomically* (one void-then-replan pass
   over the batch), so repairs never target a node that dies in the same
-  event;
+  event.  Within an event, items replan most-degraded-first
+  (``SimConfig.repair_priority="health"``: surviving-chunks-minus-K
+  margin, item-id tie-break, re-derived at every event) so finite repair
+  bandwidth is spent where data loss is nearest; ``"fifo"`` keeps the
+  legacy insertion-order scan;
 * **repair completions** — with a *finite* per-node repair bandwidth
   (``SimConfig.repair_bw_mbps``), a repair charges traffic on both sides
   of the reconstruction: each replacement node ingests its
@@ -63,7 +67,14 @@ import numpy as np
 from repro.core.algorithms import Scheduler
 from repro.core.engine import BatchContext, PlacementEngine
 from repro.core.repair import RepairPlan
-from repro.core.types import ClusterView, DataItem, ECTimeModel, Placement, StorageNode
+from repro.core.types import (
+    ClusterView,
+    DataItem,
+    ECTimeModel,
+    Placement,
+    PlacementConstraints,
+    StorageNode,
+)
 
 __all__ = ["SimConfig", "SimResult", "StoredItem", "Simulator", "run_simulation"]
 
@@ -107,6 +118,25 @@ class SimConfig:
     node_join_schedule: tuple[tuple[float, StorageNode], ...] = ()
     #: (day, node_id) failed nodes returning alive and empty.
     node_heal_schedule: tuple[tuple[float, int], ...] = ()
+    #: replanning order when one failure event touches several items:
+    #: ``"health"`` (default) repairs the most-degraded first, keyed by
+    #: surviving-chunks-minus-K margin with a deterministic item-id
+    #: tie-break, and re-derives the priorities at every failure event;
+    #: ``"fifo"`` keeps the legacy insertion-order scan.  Under finite
+    #: repair bandwidth, health ordering spends the budget where data
+    #: loss is nearest — an item one failure from death books lanes
+    #: before one that can still lose P more chunks.
+    repair_priority: str = "health"
+    #: failure-domain constraints applied to every placement and repair
+    #: the simulator's engine makes (rack/zone caps + spread width).
+    constraints: Optional[PlacementConstraints] = None
+
+    def __post_init__(self) -> None:
+        if self.repair_priority not in ("health", "fifo"):
+            raise ValueError(
+                f"repair_priority must be 'health' or 'fifo', "
+                f"got {self.repair_priority!r}"
+            )
 
 
 @dataclasses.dataclass
@@ -201,7 +231,11 @@ class Simulator:
         # reservations, and measures per-decision overhead; the sim
         # shares one BatchContext across the whole run (AFRs never change
         # mid-simulation) so the reliability DP amortizes over the trace.
-        self.engine = PlacementEngine(ClusterView.from_nodes(self.nodes), scheduler)
+        self.engine = PlacementEngine(
+            ClusterView.from_nodes(self.nodes),
+            scheduler,
+            constraints=self.config.constraints,
+        )
         self.scheduler = self.engine.scheduler
         self.cluster = self.engine.cluster
         self.ctx = BatchContext()
@@ -227,6 +261,10 @@ class Simulator:
         self.n_repairs_aborted = 0
         self.repaired_mb = 0.0
         self.repair_read_mb = 0.0
+        #: deterministic replan trace: one ``(day, item_id, margin)`` row
+        #: per repair-or-drop decision, in the exact order the decisions
+        #: were made — the same-seed replay digest hashes this.
+        self.repair_log: list[tuple[float, int, int]] = []
 
     # -- store path ---------------------------------------------------------
 
@@ -287,9 +325,13 @@ class Simulator:
         All deaths land *before* any replanning (this is what the
         correlated rack/zone events rely on): a repair planned for one
         victim can never choose another same-event victim as a
-        replacement target or decode source.  For a single node this is
-        exactly the old ``fail_node`` — same iteration order, same
-        decisions, bit-for-bit."""
+        replacement target or decode source.  Replanning order follows
+        ``SimConfig.repair_priority``: most-degraded-first by
+        surviving-chunks-minus-K margin (``"health"``, the default,
+        item-id tie-break), or the legacy insertion-order scan
+        (``"fifo"`` — with which a single-node event is exactly the old
+        ``fail_node``, same decisions bit-for-bit).  Every decision is
+        appended to :attr:`repair_log` in replan order."""
         dead: list[int] = []
         for nid in node_ids:
             nid = int(nid)
@@ -315,7 +357,7 @@ class Simulator:
         # then re-plan.  Interleaving the two would let a re-plan book a
         # lane window that a later void still occupies, leaving one lane
         # with overlapping transfers.
-        affected: list[tuple[StoredItem, Optional[list[int]]]] = []
+        affected: list[tuple[int, int, StoredItem, Optional[list[int]]]] = []
         for iid in list(self.live_items):
             si = self.live_items[iid]
             pend = self._pending.get(iid)
@@ -328,12 +370,27 @@ class Simulator:
                 self._release_lanes(pend, day)
                 del self._pending[iid]
                 self.n_repairs_aborted += 1
-                affected.append(
-                    (si, [n for n in pend.plan.survivors if self.cluster.alive[n]])
-                )
+                survivors = [
+                    n for n in pend.plan.survivors if self.cluster.alive[n]
+                ]
+                margin = len(survivors) - si.placement.k
+                affected.append((margin, iid, si, survivors))
             elif not dead_set.isdisjoint(si.placement.node_ids):
-                affected.append((si, None))
-        for si, survivors in affected:
+                n_live = sum(
+                    1 for n in si.placement.node_ids if self.cluster.alive[n]
+                )
+                affected.append((n_live - si.placement.k, iid, si, None))
+        if self.config.repair_priority == "health":
+            # Health-prioritized repair: most-degraded items (smallest
+            # surviving-chunks-minus-K margin) replan first, so finite
+            # repair bandwidth is booked where data loss is nearest;
+            # deterministic item-id tie-break.  Margins are re-derived at
+            # every failure event, so a second event re-prioritizes the
+            # items it voids.  "fifo" preserves the legacy
+            # insertion-order scan.
+            affected.sort(key=lambda entry: (entry[0], entry[1]))
+        for margin, iid, si, survivors in affected:
+            self.repair_log.append((day, iid, margin))
             self._repair_or_drop(si, day, survivors=survivors)
 
     def _repair_or_drop(

@@ -14,7 +14,7 @@ from repro.core import (
     ECTimeModel,
     SCHEDULER_NAMES,
     StorageNode,
-    make_scheduler,
+    create_scheduler,
 )
 from repro.core.reliability import pr_avail
 from repro.storage import make_node_set
@@ -55,7 +55,7 @@ class TestInvariants:
     def test_placement_satisfies_problem1(self, name):
         cluster = ClusterView.from_nodes(make_node_set("most_used", 0.001))
         item = mk_item(size_mb=500.0, rt=0.95)
-        d = make_scheduler(name).place(item, cluster)
+        d = create_scheduler(name).place(item, cluster)
         assert d.placement is not None, d.reason
         pl = d.placement
         ids = list(pl.node_ids)
@@ -70,20 +70,20 @@ class TestInvariants:
     def test_no_mutation_of_cluster(self, name):
         cluster = ClusterView.from_nodes(make_node_set("most_used", 0.001))
         before = cluster.used_mb.copy()
-        make_scheduler(name).place(mk_item(), cluster)
+        create_scheduler(name).place(mk_item(), cluster)
         np.testing.assert_array_equal(before, cluster.used_mb)
 
     @pytest.mark.parametrize("name", ALL_SCHEDULERS)
     def test_impossible_target_fails_gracefully(self, name):
         # Nodes that essentially always fail within the window.
         cluster = mk_cluster([1e6] * 5, afr=[500.0] * 5)
-        d = make_scheduler(name).place(mk_item(rt=0.999999), cluster)
+        d = create_scheduler(name).place(mk_item(rt=0.999999), cluster)
         assert d.placement is None
 
     @pytest.mark.parametrize("name", ALL_SCHEDULERS)
     def test_capacity_exhaustion_fails_gracefully(self, name):
         cluster = mk_cluster([10.0] * 10)  # 10 MB nodes
-        d = make_scheduler(name).place(mk_item(size_mb=1e6), cluster)
+        d = create_scheduler(name).place(mk_item(size_mb=1e6), cluster)
         assert d.placement is None
 
     @pytest.mark.parametrize("name", ALL_SCHEDULERS)
@@ -91,7 +91,7 @@ class TestInvariants:
         cluster = ClusterView.from_nodes(make_node_set("most_used", 0.001))
         for dead in (0, 3, 9):
             cluster.fail_node(dead)
-        d = make_scheduler(name).place(mk_item(), cluster)
+        d = create_scheduler(name).place(mk_item(), cluster)
         if d.placement is not None:
             assert not ({0, 3, 9} & set(d.placement.node_ids))
 
@@ -99,7 +99,7 @@ class TestInvariants:
 class TestGreedyMinStorage:
     def test_prefers_large_k(self):
         cluster = ClusterView.from_nodes(make_node_set("most_used", 0.001))
-        d = make_scheduler("greedy_min_storage").place(mk_item(rt=0.9), cluster)
+        d = create_scheduler("greedy_min_storage").place(mk_item(rt=0.9), cluster)
         # With reliable nodes the min-overhead solution uses many chunks.
         assert d.placement.k >= 7
 
@@ -108,7 +108,7 @@ class TestGreedyMinStorage:
         caps = [100.0, 100.0, 1e6, 1e6, 1e6, 1e6, 1e6]
         bw = [1000.0, 900.0, 100.0, 100.0, 100.0, 100.0, 100.0]
         cluster = mk_cluster(caps, bw_w=bw, bw_r=bw)
-        d = make_scheduler("greedy_min_storage").place(mk_item(size_mb=5000.0), cluster)
+        d = create_scheduler("greedy_min_storage").place(mk_item(size_mb=5000.0), cluster)
         assert d.placement is not None
         assert not ({0, 1} & set(d.placement.node_ids))
 
@@ -116,7 +116,7 @@ class TestGreedyMinStorage:
 class TestGreedyLeastUsed:
     def test_minimizes_n(self):
         cluster = ClusterView.from_nodes(make_node_set("most_reliable", 0.001))
-        d = make_scheduler("greedy_least_used").place(mk_item(rt=0.9), cluster)
+        d = create_scheduler("greedy_least_used").place(mk_item(rt=0.9), cluster)
         assert d.placement.n == 3  # smallest N with K>=2, P>=1
         assert d.placement.k == 2
 
@@ -124,14 +124,14 @@ class TestGreedyLeastUsed:
         caps = [1e6] * 6
         cluster = mk_cluster(caps)
         cluster.used_mb[:] = [9e5, 8e5, 7e5, 0.0, 1e5, 2e5]
-        d = make_scheduler("greedy_least_used").place(mk_item(), cluster)
+        d = create_scheduler("greedy_least_used").place(mk_item(), cluster)
         assert set(d.placement.node_ids) == {3, 4, 5}
 
 
 class TestDRexLB:
     def test_smallest_feasible_parity(self):
         cluster = ClusterView.from_nodes(make_node_set("most_used", 0.001))
-        d = make_scheduler("drex_lb").place(mk_item(rt=0.9), cluster)
+        d = create_scheduler("drex_lb").place(mk_item(rt=0.9), cluster)
         assert d.placement.p == 1
         assert d.placement.k >= 2  # Alg. 1 line 6
 
@@ -139,7 +139,7 @@ class TestDRexLB:
         caps = [1e6] * 5
         cluster = mk_cluster(caps)
         cluster.used_mb[:] = [5e5, 5e5, 0.0, 0.0, 0.0]
-        d = make_scheduler("drex_lb").place(mk_item(size_mb=1000.0), cluster)
+        d = create_scheduler("drex_lb").place(mk_item(size_mb=1000.0), cluster)
         # Mapping is a prefix of the free-space ordering: emptiest first.
         assert set(d.placement.node_ids) >= {2, 3, 4}
 
@@ -147,13 +147,13 @@ class TestDRexLB:
 class TestDRexSC:
     def test_returns_pareto_scored_choice(self):
         cluster = ClusterView.from_nodes(make_node_set("most_used", 0.001))
-        d = make_scheduler("drex_sc").place(mk_item(rt=0.9), cluster)
+        d = create_scheduler("drex_sc").place(mk_item(rt=0.9), cluster)
         assert d.placement is not None
         assert 1 <= d.placement.k <= 9
         assert d.candidates_considered > 10
 
     def test_mapping_cap_respected(self):
-        sched = make_scheduler("drex_sc")
+        sched = create_scheduler("drex_sc")
         cluster = ClusterView.from_nodes(make_node_set("most_used", 0.001))
         d = sched.place(mk_item(), cluster)
         assert d.candidates_considered <= sched.MAX_MAPPINGS
@@ -163,29 +163,29 @@ class TestStaticAndDAOS:
     def test_static_ec_fixed_parameters(self):
         cluster = ClusterView.from_nodes(make_node_set("most_used", 0.001))
         for k, p in [(3, 2), (4, 2), (6, 3)]:
-            d = make_scheduler(f"ec({k},{p})").place(mk_item(), cluster)
+            d = create_scheduler(f"ec({k},{p})").place(mk_item(), cluster)
             assert (d.placement.k, d.placement.p) == (k, p)
 
     def test_static_ec_picks_fastest_nodes(self):
         bw = [100.0, 200.0, 300.0, 400.0, 500.0, 600.0, 700.0]
         cluster = mk_cluster([1e6] * 7, bw_w=bw, bw_r=bw)
-        d = make_scheduler("ec(3,2)").place(mk_item(), cluster)
+        d = create_scheduler("ec(3,2)").place(mk_item(), cluster)
         assert set(d.placement.node_ids) == {2, 3, 4, 5, 6}
 
     def test_static_ec_fails_on_unreachable_target(self):
         cluster = mk_cluster([1e6] * 10, afr=[3.0] * 10)  # very unreliable
-        d = make_scheduler("ec(3,2)").place(mk_item(rt=0.9999999, dt=365.0), cluster)
+        d = create_scheduler("ec(3,2)").place(mk_item(rt=0.9999999, dt=365.0), cluster)
         assert d.placement is None
 
     def test_daos_lowest_overhead_config_first(self):
         cluster = ClusterView.from_nodes(make_node_set("most_reliable", 0.001))
-        d = make_scheduler("daos").place(mk_item(rt=0.9), cluster)
+        d = create_scheduler("daos").place(mk_item(rt=0.9), cluster)
         assert (d.placement.k, d.placement.p) == (8, 1)  # 1.125x overhead
 
     def test_daos_escalates_to_replication(self):
         # Unreliable nodes + extreme target: only 6x replication survives.
         cluster = mk_cluster([1e6] * 10, afr=[1.5] * 10)
-        d = make_scheduler("daos").place(mk_item(rt=0.99999, dt=30.0), cluster)
+        d = create_scheduler("daos").place(mk_item(rt=0.99999, dt=30.0), cluster)
         if d.placement is not None:
             assert d.placement.k == 1  # replication config
 
@@ -228,7 +228,7 @@ def test_property_any_returned_placement_is_valid(size, rt, dt, name):
     reliability constraint and capacity (Problem 1)."""
     cluster = ClusterView.from_nodes(make_node_set("most_used", 0.001))
     item = DataItem(0, size, 0.0, dt, rt)
-    d = make_scheduler(name).place(item, cluster)
+    d = create_scheduler(name).place(item, cluster)
     if d.placement is None:
         return
     pl = d.placement

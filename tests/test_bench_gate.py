@@ -180,9 +180,29 @@ def fig12_payload(retained: float, *, smoke=True, schema=SCHEMA_VERSION):
         },
         "repair_bw_sweep": {
             "drex_sc": {
-                "inf": {"retained_fraction": 1.0},
-                "0.01": {"retained_fraction": 0.25},
+                "inf": {"retained_fraction": 1.0,
+                        "retained_fraction_fifo": 1.0},
+                "0.01": {"retained_fraction": 0.25,
+                         "retained_fraction_fifo": 0.25},
             },
+            "ec(3,2)": {
+                "inf": {"retained_fraction": 1.0,
+                        "retained_fraction_fifo": 1.0},
+                "0.01": {"retained_fraction": 0.5,
+                         "retained_fraction_fifo": 0.5},
+            },
+        },
+        "rack_event": {
+            "drex_sc": {
+                "inf": {"topo_retained": 1.0, "blind_retained": 0.9},
+                "0.01": {"topo_retained": 1.0, "blind_retained": 0.9},
+            },
+            "ec(3,2)": {
+                "inf": {"topo_retained": 1.0, "blind_retained": 1.0},
+                "0.01": {"topo_retained": 1.0, "blind_retained": 1.0},
+            },
+            "meets_improvement_floor": 1,
+            "improvement_ratio": 1.05,
         },
         "meta": {"schema_version": schema, "git_sha": "abc123", "smoke": smoke},
     }

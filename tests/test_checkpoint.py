@@ -8,7 +8,7 @@ import pytest
 
 from repro.checkpoint import CheckpointPolicy, DRexCheckpointer, StorageFabric
 from repro.configs import get_config
-from repro.core import make_scheduler
+from repro.core import create_scheduler
 from repro.data import DataConfig
 from repro.launch import make_local_mesh
 from repro.optim import AdamWConfig

@@ -23,19 +23,25 @@ from repro.core import (
     BatchContext,
     ClusterView,
     DataItem,
+    PlacementConstraints,
     PlacementEngine,
     SCHEDULER_NAMES,
     StorageNode,
     create_scheduler,
-    get_spec,
-    scheduler_names,
+    find,
 )
 from repro.core.reliability import min_parity_for_target, pr_avail
 
 # Materialized registry sweep: SCHEDULER_NAMES resolves the paper's nine
 # (incl. the ec(K,P) family members) into the registry at import time;
-# scheduler_names() then yields every registration.
-ALL_REGISTERED = sorted(set(scheduler_names()) | set(SCHEDULER_NAMES))
+# registry.find() then yields every concrete registration.
+ALL_REGISTERED = sorted({s.name for s in find()} | set(SCHEDULER_NAMES))
+
+# Capability-keyed sweeps come from the registry query API, never from
+# poking class attributes.
+BATCH_SCORING = [s.name for s in find(batch_scoring=True)]
+TOPOLOGY_AWARE = [s.name for s in find(topology_aware=True)]
+NON_ADAPTIVE = [s.name for s in find(adaptive=False)]
 
 
 def random_cluster(seed: int, n_lo: int = 5, n_hi: int = 14) -> ClusterView:
@@ -153,19 +159,18 @@ class TestCapabilityContracts:
     def test_randomized_schedulers_are_pure_per_item(self, name):
         # randomized == mapping depends on a seed, but repeated calls for
         # the same (seed, item, cluster) must still agree (pure function).
-        caps = get_spec(name).capabilities
+        randomized = name in {s.name for s in find(randomized=True)}
         cluster = random_cluster(3)
         item = random_items(3, count=1)[0]
         a = create_scheduler(name).place(item, cluster)
         b = create_scheduler(name).place(item, cluster)
         assert a.placement == b.placement, (
             f"{name}: place is not a pure function of (seed, item, cluster)"
-            + (" despite randomized flag" if caps.randomized else "")
+            + (" despite randomized flag" if randomized else "")
         )
 
     def test_non_adaptive_schedulers_use_a_fixed_code(self, name):
-        caps = get_spec(name).capabilities
-        if caps.adaptive:
+        if name not in NON_ADAPTIVE:
             pytest.skip("adaptive schedulers choose (K, P) per item")
         engine = PlacementEngine(
             random_cluster(4, n_lo=10, n_hi=14),
@@ -180,8 +185,7 @@ class TestCapabilityContracts:
         assert len(codes) <= 1, f"{name} varied (K,P) without adaptive flag"
 
     def test_batch_scoring_schedulers_match_sequential_place(self, name):
-        caps = get_spec(name).capabilities
-        if not caps.batch_scoring:
+        if name not in BATCH_SCORING:
             pytest.skip("scheduler does not declare batch scoring")
         sched = create_scheduler(name)
         assert hasattr(sched, "place_batch"), (
@@ -194,3 +198,208 @@ class TestCapabilityContracts:
         got = [r.placement for r in bat.place_many(items, ctx=BatchContext())]
         assert got == want
         np.testing.assert_array_equal(seq.cluster.used_mb, bat.cluster.used_mb)
+
+
+# -- failure-domain invariants (PlacementConstraints) -----------------------
+
+#: rack cap 2, mappings must span >= 2 racks and >= 2 zones.
+DOMAIN_CAPS = PlacementConstraints(max_per_rack=2, min_racks=2, min_zones=2)
+
+
+def topo_cluster(seed: int, n_racks: int = 5, per_rack: int = 3) -> ClusterView:
+    """Random cluster with rack ids interleaved over node ids and racks
+    nested two-per-zone."""
+    rng = np.random.default_rng(seed + 77)
+    nodes = [
+        StorageNode(
+            node_id=i,
+            capacity_mb=float(rng.uniform(5e4, 1e5)),
+            write_bw=float(rng.uniform(100, 400)),
+            read_bw=float(rng.uniform(100, 450)),
+            annual_failure_rate=float(rng.uniform(0.001, 0.05)),
+            rack=i % n_racks,
+            zone=(i % n_racks) // 2,
+        )
+        for i in range(n_racks * per_rack)
+    ]
+    return ClusterView.from_nodes(nodes)
+
+
+def _assert_conforms(placement, cluster, constraints, who):
+    assert constraints.satisfied_by(
+        placement.node_ids, cluster.rack, cluster.zone
+    ), (
+        f"{who}: mapping {placement.node_ids} violates {constraints} "
+        f"(racks={list(cluster.rack[list(placement.node_ids)])}, "
+        f"zones={list(cluster.zone[list(placement.node_ids)])})"
+    )
+
+
+@pytest.mark.parametrize("name", ALL_REGISTERED)
+@pytest.mark.parametrize("seed", SEEDS)
+class TestFailureDomainInvariants:
+    """Registry-wide zone-spread invariant: with constraints active on
+    the engine, no accepted mapping exceeds a per-domain cap or narrows
+    below the spread width — after place, after repair, and after heal.
+    ``topology_aware`` schedulers conform by construction (cap-admitted
+    candidate orders); everyone else through the engine's swap
+    post-pass.  Checked by capability flag, never by name."""
+
+    def _engine(self, name, seed):
+        return PlacementEngine(
+            topo_cluster(seed), create_scheduler(name), constraints=DOMAIN_CAPS
+        )
+
+    def test_caps_and_spread_hold_after_place(self, name, seed):
+        engine = self._engine(name, seed)
+        for rec in (engine.place(it) for it in random_items(seed)):
+            if rec.ok:
+                _assert_conforms(rec.placement, engine.cluster, DOMAIN_CAPS, name)
+
+    def test_caps_and_spread_hold_after_repair(self, name, seed):
+        engine = self._engine(name, seed)
+        items = random_items(seed)
+        records = [engine.place(it) for it in items]
+        for item, rec in zip(items, records):
+            if not rec.ok:
+                continue
+            engine.cluster.fail_node(int(rec.placement.node_ids[0]))
+            plan = engine.plan_repair(item, rec.placement, chunk_mb=rec.chunk_mb)
+            if plan.ok:
+                _assert_conforms(plan.placement, engine.cluster, DOMAIN_CAPS, name)
+            break  # one repair per seed keeps the sweep fast
+
+    def test_caps_and_spread_hold_after_heal(self, name, seed):
+        engine = self._engine(name, seed)
+        engine.cluster.fail_node(0)
+        engine.cluster.fail_node(1)
+        engine.cluster.heal_node(0)
+        for rec in (engine.place(it) for it in random_items(seed, count=4)):
+            if rec.ok:
+                _assert_conforms(rec.placement, engine.cluster, DOMAIN_CAPS, name)
+
+    def test_unconstrained_engine_is_unchanged(self, name, seed):
+        # constraints=None must decide exactly as before this API existed.
+        base = PlacementEngine(topo_cluster(seed), create_scheduler(name))
+        want = [base.place(it).placement for it in random_items(seed, count=4)]
+        again = PlacementEngine(topo_cluster(seed), create_scheduler(name))
+        got = [again.place(it).placement for it in random_items(seed, count=4)]
+        assert got == want
+
+
+class TestRackEventBlastRadius:
+    """Acceptance: with a rack-failure schedule and ``topology_aware``
+    placement under a satisfiable spread constraint whose rack cap is at
+    most every mapping's parity count, no single rack event can destroy
+    more than P chunks of any item."""
+
+    @pytest.mark.parametrize("name", TOPOLOGY_AWARE)
+    def test_rack_event_destroys_at_most_p_chunks(self, name):
+        from repro.storage import SimConfig, Simulator
+
+        # Cap 1 chunk per rack (<= P for every code the schedulers emit);
+        # 15 racks leaves spare racks for the post-event repairs even
+        # when a scheduler maps 10 chunks wide.
+        c = PlacementConstraints(max_per_rack=1, min_racks=3)
+        nodes = [
+            StorageNode(
+                node_id=i,
+                capacity_mb=5e4,
+                write_bw=200.0,
+                read_bw=250.0,
+                annual_failure_rate=0.01,
+                rack=i % 15,
+                zone=(i % 15) // 3,
+            )
+            for i in range(30)
+        ]
+        cfg = SimConfig(rack_failure_schedule=((30.0, 4),), constraints=c)
+        sim = Simulator(nodes, create_scheduler(name), cfg)
+        items = [DataItem(i, 50.0, 0.0, 365.0, 0.9) for i in range(6)]
+        res = sim.run(items)
+        assert res.n_stored > 0, f"{name} placed nothing under the constraint"
+        rack = sim.cluster.rack
+        for si in res.stored_items:
+            per_rack = np.bincount(rack[list(si.placement.node_ids)])
+            assert per_rack.max() <= si.placement.p, (
+                f"{name}: a rack event would destroy {per_rack.max()} chunks "
+                f"of item {si.item.item_id} (p={si.placement.p})"
+            )
+        # Items whose mapping left a spare rack survive the event: the
+        # chunk in the dead rack decodes from survivors and repairs
+        # instantly into an unused rack.  (A mapping spanning *all* 15
+        # racks — drex_lb maximizes width — has nowhere cap-conforming
+        # to repair into once its rack dies, and is legitimately
+        # dropped: re-protection is impossible, not mis-planned.)
+        for si in res.stored_items:
+            width = len(set(int(rack[n]) for n in si.placement.node_ids))
+            if width < 15:
+                assert si.item.item_id in sim.live_items, (
+                    f"{name}: item {si.item.item_id} had spare racks but "
+                    "was dropped by the rack event"
+                )
+
+
+class TestPrefilterSpreadBoundary:
+    """Top-M pre-filter vs spread constraints: the sliced candidate set
+    must keep per-domain representatives (``prefilter.domain_slice``)
+    so the cap cannot starve a satisfiable spread width."""
+
+    def _slice(self, racks, zones, m, **kw):
+        from repro.core import prefilter
+
+        order = np.arange(len(racks))
+        return prefilter.domain_slice(
+            order,
+            np.asarray(racks),
+            np.asarray(zones),
+            m,
+            PlacementConstraints(**kw),
+        )
+
+    def test_promotes_first_out_of_prefix_rack(self):
+        # Top-4 slice is all rack 0; min_racks=2 needs node 9 promoted.
+        out = self._slice([0] * 9 + [1], [0] * 10, 4, min_racks=2)
+        assert 9 in out and len(out) == 4
+        assert list(out) == sorted(out)  # subsequence: order preserved
+
+    def test_exact_prefix_when_slice_already_spans(self):
+        out = self._slice([0, 1, 0, 1, 0, 1], [0] * 6, 4, min_racks=2)
+        np.testing.assert_array_equal(out, np.arange(4))
+
+    def test_zone_and_rack_both_represented(self):
+        racks = [0, 0, 0, 0, 1, 2]
+        zones = [0, 0, 0, 0, 0, 1]
+        out = self._slice(racks, zones, 3, min_racks=2, min_zones=2)
+        # Needs rack 1 (node 4) and zone 1 (node 5) inside a 3-slot slice.
+        assert 4 in out and 5 in out and len(out) == 3
+
+    def test_spread_wider_than_slice_clamps_to_m(self):
+        # min_racks=5 but m=2: keep 2 distinct racks, never overflow m.
+        out = self._slice([0, 0, 1, 2, 3, 4], [0] * 6, 2, min_racks=5)
+        assert len(out) == 2 and len(set(out)) == 2
+
+    def test_greedy_scan_cap_cannot_starve_spread(self):
+        # 40 nodes; the 32 freest (greedy's SCAN_CAP) are all rack 0 —
+        # the admitted candidate set must still span two racks.
+        nodes = [
+            StorageNode(
+                node_id=i,
+                capacity_mb=1e5 if i < 32 else 1e3,
+                write_bw=200.0,
+                read_bw=250.0,
+                annual_failure_rate=0.005,
+                rack=0 if i < 32 else 1,
+                zone=0,
+            )
+            for i in range(40)
+        ]
+        engine = PlacementEngine(
+            ClusterView.from_nodes(nodes),
+            create_scheduler("greedy_least_used"),
+            constraints=PlacementConstraints(min_racks=2),
+        )
+        rec = engine.place(DataItem(0, 10.0, 0.0, 365.0, 0.9))
+        assert rec.ok
+        racks = set(int(engine.cluster.rack[n]) for n in rec.placement.node_ids)
+        assert len(racks) >= 2

@@ -7,7 +7,7 @@ import math
 import numpy as np
 import pytest
 
-from repro.core import DataItem, make_scheduler
+from repro.core import DataItem, StorageNode, create_scheduler
 from repro.storage import SimConfig, Simulator, make_node_set, make_trace, run_simulation
 from repro.storage.traces import random_reliability_targets
 
@@ -56,7 +56,7 @@ class TestSimulator:
     def test_conservation_of_bytes(self):
         nodes = make_node_set("most_used", 0.001)
         items = make_trace("meva", seed=0, n_items=300, reliability=0.9)
-        res = run_simulation(nodes, make_scheduler("drex_lb"), items)
+        res = run_simulation(nodes, create_scheduler("drex_lb"), items)
         # Bytes on nodes == sum over stored items of chunk * N.
         want = sum(s.chunk_mb * s.placement.n for s in res.stored_items)
         assert res.per_node_used_mb.sum() == pytest.approx(want, rel=1e-9)
@@ -65,14 +65,14 @@ class TestSimulator:
     def test_throughput_definition(self):
         nodes = make_node_set("most_used", 0.001)
         items = make_trace("meva", seed=0, n_items=100, reliability=0.9)
-        res = run_simulation(nodes, make_scheduler("ec(3,2)"), items)
+        res = run_simulation(nodes, create_scheduler("ec(3,2)"), items)
         io = sum(res.time_breakdown.values())
         assert res.throughput_mbps == pytest.approx(res.stored_mb / io)
 
     def test_write_read_bottleneck_is_slowest_node(self):
         nodes = make_node_set("most_used", 0.001)
         items = make_trace("meva", seed=0, n_items=50, reliability=0.9)
-        sim = Simulator(nodes, make_scheduler("ec(3,2)"))
+        sim = Simulator(nodes, create_scheduler("ec(3,2)"))
         for item in items:
             si, _ = sim.store(item)
             if si is None:
@@ -91,7 +91,7 @@ class TestFailures:
         nodes = make_node_set("most_unreliable", 0.001)
         items = make_trace("meva", seed=0, n_items=400, reliability=rt)
         cfg = SimConfig(failure_schedule=tuple(schedule))
-        return run_simulation(nodes, make_scheduler(name), items, cfg)
+        return run_simulation(nodes, create_scheduler(name), items, cfg)
 
     def test_no_failures_retains_everything(self):
         res = self._run("drex_sc", [])
@@ -102,7 +102,7 @@ class TestFailures:
         nodes = make_node_set("most_used", 0.001)
         items = make_trace("meva", seed=0, n_items=200, reliability=0.9)
         cfg = SimConfig(failure_schedule=((30.0, 2),))
-        sim = Simulator(nodes, make_scheduler("drex_lb"), cfg)
+        sim = Simulator(nodes, create_scheduler("drex_lb"), cfg)
         res = sim.run(items)
         assert not sim.cluster.alive[2]
         assert res.per_node_used_mb[2] == 0.0
@@ -123,7 +123,7 @@ class TestFailures:
         # Kill 8 of 10 nodes mid-run: EC(6,3) needs 9 -> mass drop.
         sched = tuple((35.0 + i * 0.1, i) for i in range(8))
         cfg = SimConfig(failure_schedule=sched)
-        res = run_simulation(nodes, make_scheduler("ec(6,3)"), items, cfg)
+        res = run_simulation(nodes, create_scheduler("ec(6,3)"), items, cfg)
         assert res.retained_fraction < 0.6
 
     def test_static_cannot_grow_parity(self):
@@ -131,7 +131,7 @@ class TestFailures:
         nodes = make_node_set("most_used", 0.001)
         items = make_trace("meva", seed=0, n_items=100, reliability=0.9)
         cfg = SimConfig(failure_schedule=((30.0, 0),))
-        res = run_simulation(nodes, make_scheduler("ec(3,2)"), items, cfg)
+        res = run_simulation(nodes, create_scheduler("ec(3,2)"), items, cfg)
         for s in res.stored_items:
             assert s.placement.p == 2
 
@@ -141,7 +141,7 @@ class TestFailures:
         nodes = make_node_set("most_unreliable", 0.001)
         items = make_trace("meva", seed=0, n_items=200, reliability=0.9)
         cfg = SimConfig(failure_schedule=((20.0, 0), (35.0, 4)))
-        sim = Simulator(nodes, make_scheduler("drex_sc"), cfg)
+        sim = Simulator(nodes, create_scheduler("drex_sc"), cfg)
         res = sim.run(items)
         for s in res.stored_items:
             ids = list(s.placement.node_ids)
@@ -156,7 +156,7 @@ class TestSchedulingOverhead:
         nodes = make_node_set("most_used", 0.001)
         items = make_trace("meva", seed=0, n_items=20, reliability=0.9)
         cfg = SimConfig(measure_overhead=True)
-        res = run_simulation(nodes, make_scheduler("drex_lb"), items, cfg)
+        res = run_simulation(nodes, create_scheduler("drex_lb"), items, cfg)
         assert len(res.sched_overhead_s) == 20
         assert all(t >= 0 for t in res.sched_overhead_s)
 
@@ -170,7 +170,7 @@ def _fig12_run(algo, rt, n_failures, **cfg_kwargs):
         (70.0 * (i + 1) / (n_failures + 1), -1) for i in range(n_failures)
     )
     cfg = SimConfig(failure_schedule=schedule, seed=1, **cfg_kwargs)
-    return run_simulation(nodes, make_scheduler(algo), items, cfg)
+    return run_simulation(nodes, create_scheduler(algo), items, cfg)
 
 
 @pytest.mark.slow
@@ -185,6 +185,11 @@ class TestLegacyEquivalence:
     first observed item is an intentional behavior change of this PR and
     shifts SC's saturation scoring; the other schedulers never consult
     s_min, so their goldens are the untouched pre-refactor outputs).
+
+    The pre-refactor loop replanned in item insertion order, so this
+    suite runs with ``repair_priority="fifo"`` — which doubles as the
+    regression lane for the legacy scan now that ``"health"`` is the
+    default.
     """
 
     # (rt, algo, n_failures) -> (retained_fraction, stored_mb)
@@ -219,7 +224,7 @@ class TestLegacyEquivalence:
     def test_infinite_bandwidth_matches_pre_refactor(self, key):
         rt, algo, nf = key
         want_retained, want_stored = self.GOLDEN[key]
-        res = _fig12_run(algo, rt, nf)  # default repair_bw_mbps=inf
+        res = _fig12_run(algo, rt, nf, repair_priority="fifo")
         assert res.retained_fraction == pytest.approx(want_retained, abs=1e-9)
         assert res.stored_mb == pytest.approx(want_stored, abs=1e-6)
 
@@ -227,6 +232,101 @@ class TestLegacyEquivalence:
         res = _fig12_run("drex_lb", 0.9, 4)
         assert res.n_repairs_planned == res.n_repairs_completed
         assert res.n_repairs_aborted == 0
+
+
+class TestRepairPriority:
+    """Health-prioritized replanning (``SimConfig.repair_priority``):
+    within a failure event, the most-degraded items — smallest
+    surviving-chunks-minus-K margin — replan first, with a deterministic
+    item-id tie-break; ``"fifo"`` preserves the legacy insertion-order
+    scan.  ``Simulator.repair_log`` records every decision in replan
+    order and is pinned by a same-seed replay digest."""
+
+    #: sha256 over the (day, item_id, margin) replay log of
+    #: ``_replay_run`` — pins the deterministic replan order under the
+    #: health priority (same seed => same digest, every run).
+    REPLAY_DIGEST = (
+        "238bc3c73c486a6cc01153f6d614aa6900a7a54da77ed26e9a5482d0ab88a26b"
+    )
+
+    def _flat_nodes(self, n):
+        return [
+            StorageNode(
+                node_id=i,
+                capacity_mb=1000.0,
+                write_bw=200.0,
+                read_bw=250.0,
+                annual_failure_rate=0.001,
+            )
+            for i in range(n)
+        ]
+
+    def _two_item_sim(self, **cfg_kwargs):
+        # greedy_least_used on identical nodes: item 0 lands on the first
+        # three, item 1 on the next three — disjoint placements with
+        # n=3, k=2, p=1 each.
+        cfg = SimConfig(**cfg_kwargs)
+        sim = Simulator(self._flat_nodes(8), create_scheduler("greedy_least_used"), cfg)
+        for i in range(2):
+            si, _ = sim.store(DataItem(i, 5.0, 0.0, 365.0, 0.9))
+            assert si is not None
+        pl0 = sim.live_items[0].placement.node_ids
+        pl1 = sim.live_items[1].placement.node_ids
+        assert set(pl0).isdisjoint(pl1)
+        return sim, pl0, pl1
+
+    def test_most_degraded_replans_first(self):
+        sim, pl0, pl1 = self._two_item_sim()
+        # One event: item 1 loses two chunks (margin -1, unrepairable),
+        # item 0 one (margin 0) — health order puts item 1 first even
+        # though item 0 was inserted first.
+        sim.fail_nodes([pl1[0], pl1[1], pl0[0]], day=10.0)
+        assert sim.repair_log == [(10.0, 1, -1), (10.0, 0, 0)]
+
+    def test_equal_margins_tie_break_on_item_id(self):
+        sim, pl0, pl1 = self._two_item_sim()
+        sim.fail_nodes([pl0[0], pl1[0]], day=10.0)
+        assert sim.repair_log == [(10.0, 0, 0), (10.0, 1, 0)]
+
+    def test_fifo_replans_in_insertion_order(self):
+        sim, pl0, pl1 = self._two_item_sim(repair_priority="fifo")
+        sim.fail_nodes([pl1[0], pl1[1], pl0[0]], day=10.0)
+        assert [iid for _, iid, _ in sim.repair_log] == [0, 1]
+
+    def test_margins_rederived_when_pending_repairs_void(self):
+        sim, pl0, pl1 = self._two_item_sim(repair_bw_mbps=0.001)
+        sim.fail_nodes([pl1[0]], day=10.0)  # margin 0, repair in flight
+        # A survivor dies before the repair lands: the void re-derives
+        # the margin from the pending plan's live survivors.
+        sim.fail_nodes([pl1[1]], day=10.001)
+        assert sim.repair_log == [(10.0, 1, 0), (10.001, 1, -1)]
+
+    def test_invalid_priority_rejected(self):
+        with pytest.raises(ValueError, match="repair_priority"):
+            SimConfig(repair_priority="lifo")
+
+    def _replay_run(self):
+        nodes = make_node_set("most_unreliable", 0.001)
+        cap = sum(n.capacity_mb for n in nodes)
+        items = make_trace("meva", seed=1, total_mb=cap * 0.1, reliability=0.9)
+        schedule = tuple((20.0 + 7.0 * i, -1) for i in range(5))
+        cfg = SimConfig(failure_schedule=schedule, seed=3, repair_bw_mbps=0.05)
+        sim = Simulator(nodes, create_scheduler("drex_lb"), cfg)
+        sim.run(items)
+        return sim
+
+    def test_same_seed_replay_digest(self):
+        import hashlib
+
+        digests = []
+        for _ in range(2):
+            sim = self._replay_run()
+            payload = repr(
+                [(round(d, 9), i, m) for d, i, m in sim.repair_log]
+            ).encode()
+            digests.append(hashlib.sha256(payload).hexdigest())
+        assert digests[0] == digests[1]  # same seed => same replan order
+        assert digests[0] == self.REPLAY_DIGEST
 
 
 class TestRepairBandwidth:
@@ -241,7 +341,7 @@ class TestRepairBandwidth:
         cap = sum(n.capacity_mb for n in nodes)
         items = make_trace("meva", seed=1, total_mb=cap * 0.15, reliability=0.9)
         cfg = SimConfig(failure_schedule=self.BURST, seed=1, repair_bw_mbps=bw)
-        return run_simulation(nodes, make_scheduler(algo), items, cfg)
+        return run_simulation(nodes, create_scheduler(algo), items, cfg)
 
     def test_retained_fraction_degrades_as_bandwidth_shrinks(self):
         retained = [
@@ -283,7 +383,7 @@ class TestRepairBandwidth:
         # queue on that node's lane.
         nodes = make_node_set("most_used", 0.001)[:6]
         cfg = SimConfig(repair_bw_mbps=0.001)
-        sim = Simulator(nodes, make_scheduler("ec(3,2)"), cfg)
+        sim = Simulator(nodes, create_scheduler("ec(3,2)"), cfg)
         for i in range(3):
             si, _ = sim.store(DataItem(i, 5.0, 0.0, 365.0, 0.9))
             assert si is not None
@@ -313,7 +413,7 @@ class TestRepairBandwidth:
         occupies, producing overlapping transfers on one repair lane."""
         nodes = make_node_set("most_used", 0.001)[:7]
         cfg = SimConfig(repair_bw_mbps=0.001)
-        sim = Simulator(nodes, make_scheduler("ec(3,2)"), cfg)
+        sim = Simulator(nodes, create_scheduler("ec(3,2)"), cfg)
         for i in range(3):
             si, _ = sim.store(DataItem(i, 5.0, 0.0, 365.0, 0.9))
             assert si is not None
@@ -335,7 +435,7 @@ class TestRepairBandwidth:
         # transfers in the past once simulated time has advanced.
         nodes = make_node_set("most_used", 0.001)[:6]
         cfg = SimConfig(repair_bw_mbps=0.001)
-        sim = Simulator(nodes, make_scheduler("ec(3,2)"), cfg)
+        sim = Simulator(nodes, create_scheduler("ec(3,2)"), cfg)
         sim.run([DataItem(0, 5.0, 20.0 * 86400.0, 365.0, 0.9)])
         mapped = sim.live_items[0].placement.node_ids
         sim.fail_node(mapped[0])  # no day passed: clock says day 20
@@ -368,7 +468,7 @@ class TestElasticMembership:
         cfg = SimConfig(
             node_join_schedule=((10.0, all_nodes[2]), (10.0, all_nodes[3])),
         )
-        sim = Simulator(all_nodes[:2], make_scheduler("drex_lb"), cfg)
+        sim = Simulator(all_nodes[:2], create_scheduler("drex_lb"), cfg)
         items = self._mini_items(1, 3) + self._mini_items(20, 3)
         res = sim.run(items)
         assert sim.cluster.n_nodes == 4
@@ -389,7 +489,7 @@ class TestElasticMembership:
             failure_schedule=((4.0, 1),),
             node_heal_schedule=((10.0, 1),),
         )
-        sim = Simulator(nodes, make_scheduler("ec(3,2)"), cfg)
+        sim = Simulator(nodes, create_scheduler("ec(3,2)"), cfg)
         items = self._mini_items(1, 2) + self._mini_items(5, 2) + self._mini_items(12, 2)
         res = sim.run(items)
         mid = {i.item_id for i in items[2:4]}
@@ -402,7 +502,7 @@ class TestElasticMembership:
 
     def test_heal_of_live_node_is_noop(self):
         nodes = make_node_set("most_used", 0.001)[:5]
-        sim = Simulator(nodes, make_scheduler("ec(3,2)"))
+        sim = Simulator(nodes, create_scheduler("ec(3,2)"))
         res = sim.run(self._mini_items(1, 2))
         used_before = sim.cluster.used_mb.copy()
         sim.heal_node(0)  # alive: must not wipe its occupancy
@@ -415,7 +515,7 @@ class TestFailureTelemetry:
         nodes = make_node_set("most_used", 0.001)
         items = make_trace("meva", seed=0, n_items=200, reliability=0.9)
         cfg = SimConfig(failure_schedule=((30.0, 2),))
-        res = run_simulation(nodes, make_scheduler("drex_lb"), items, cfg)
+        res = run_simulation(nodes, create_scheduler("drex_lb"), items, cfg)
         # The live view shows the dead node as 0 (its bytes are gone)...
         assert res.per_node_used_mb[2] == 0.0
         # ...but the failure snapshot preserves what it held when it died.
@@ -425,7 +525,7 @@ class TestFailureTelemetry:
     def test_no_failures_no_snapshot(self):
         nodes = make_node_set("most_used", 0.001)
         items = make_trace("meva", seed=0, n_items=50, reliability=0.9)
-        res = run_simulation(nodes, make_scheduler("drex_lb"), items)
+        res = run_simulation(nodes, create_scheduler("drex_lb"), items)
         assert res.used_mb_at_failure == {}
 
 
@@ -434,7 +534,7 @@ def _spare_sim(n_nodes=6, n_items=3, cfg=None):
     same 5-node prefix (by write bandwidth), leaving ``n_nodes - 5``
     spares.  Returns (sim, mapped, spares)."""
     nodes = make_node_set("most_used", 0.001)[:n_nodes]
-    sim = Simulator(nodes, make_scheduler("ec(3,2)"), cfg)
+    sim = Simulator(nodes, create_scheduler("ec(3,2)"), cfg)
     for i in range(n_items):
         si, _ = sim.store(DataItem(i, 5.0, 0.0, 365.0, 0.9))
         assert si is not None
@@ -457,7 +557,7 @@ class TestCorrelatedFailures:
 
     def test_zone_event_kills_every_live_node_in_zone(self):
         cfg = SimConfig(zone_failure_schedule=((30.0, 0),))
-        sim = Simulator(self._zoned_nodes(), make_scheduler("ec(3,2)"), cfg)
+        sim = Simulator(self._zoned_nodes(), create_scheduler("ec(3,2)"), cfg)
         items = [DataItem(i, 5.0, 0.0, 365.0, 0.9) for i in range(3)]
         res = sim.run(items)
         assert res.n_node_failures == 3
@@ -467,7 +567,7 @@ class TestCorrelatedFailures:
 
     def test_rack_event_scopes_to_the_rack(self):
         cfg = SimConfig(rack_failure_schedule=((30.0, 1),))
-        sim = Simulator(self._zoned_nodes(), make_scheduler("ec(3,2)"), cfg)
+        sim = Simulator(self._zoned_nodes(), create_scheduler("ec(3,2)"), cfg)
         res = sim.run([DataItem(0, 5.0, 0.0, 365.0, 0.9)])
         assert res.n_node_failures == 2
         assert set(res.used_mb_at_failure) == {2, 3}  # rack 1
@@ -475,7 +575,7 @@ class TestCorrelatedFailures:
 
     def test_event_on_empty_or_unknown_domain_is_a_noop(self):
         cfg = SimConfig(rack_failure_schedule=((30.0, 99),))
-        sim = Simulator(self._zoned_nodes(), make_scheduler("ec(3,2)"), cfg)
+        sim = Simulator(self._zoned_nodes(), create_scheduler("ec(3,2)"), cfg)
         res = sim.run([DataItem(0, 5.0, 0.0, 365.0, 0.9)])
         assert res.n_node_failures == 0 and res.dropped_mb == 0.0
 
@@ -505,7 +605,7 @@ class TestCorrelatedFailures:
 
     def test_fail_nodes_dedupes_and_skips_dead(self):
         nodes = make_node_set("most_used", 0.001)[:6]
-        sim = Simulator(nodes, make_scheduler("ec(3,2)"))
+        sim = Simulator(nodes, create_scheduler("ec(3,2)"))
         sim.fail_nodes([1, 1, 2], day=5.0)
         assert sim.n_node_failures == 2
         sim.fail_nodes([2, 97], day=6.0)  # dead + out of range: no-op

@@ -9,7 +9,7 @@ import pytest
 
 from repro.checkpoint import CheckpointPolicy, DRexCheckpointer, StorageFabric
 from repro.configs import get_config
-from repro.core import SCHEDULER_NAMES, make_scheduler
+from repro.core import SCHEDULER_NAMES, create_scheduler
 from repro.data import DataConfig
 from repro.launch import make_local_mesh
 from repro.optim import AdamWConfig
@@ -30,7 +30,7 @@ def saturating_results():
     cap = sum(n.capacity_mb for n in nodes)
     items = make_trace("meva", seed=0, total_mb=cap * 0.95)
     return {
-        name: run_simulation(nodes, make_scheduler(name), items)
+        name: run_simulation(nodes, create_scheduler(name), items)
         for name in SOTA + ["drex_sc", "drex_lb", "greedy_min_storage", "greedy_least_used"]
     }
 
@@ -59,9 +59,9 @@ class TestPaperHeadlines:
         nodes = make_node_set("most_used", capacity_scale=0.001)
         items = make_trace("meva", seed=0, n_items=60, reliability=0.9999999)
         for algo in ("ec(3,2)", "ec(4,2)", "ec(6,3)"):
-            res = run_simulation(nodes, make_scheduler(algo), items)
+            res = run_simulation(nodes, create_scheduler(algo), items)
             assert res.n_stored == 0, algo
-        res = run_simulation(nodes, make_scheduler("drex_sc"), items)
+        res = run_simulation(nodes, create_scheduler("drex_sc"), items)
         assert res.n_stored == len(items)
 
     def test_dynamic_algorithms_survive_more_failures(self):
@@ -75,10 +75,10 @@ class TestPaperHeadlines:
         items = make_trace("meva", seed=1, total_mb=cap * 0.15, reliability=0.9)
         sched = tuple((20.0 + 10 * i, -1) for i in range(4))  # weighted draws
         cfg = SimConfig(failure_schedule=sched, seed=1)
-        dyn = run_simulation(nodes, make_scheduler("drex_sc"), items, cfg)
+        dyn = run_simulation(nodes, create_scheduler("drex_sc"), items, cfg)
         assert dyn.retained_fraction > 0.95
         static = run_simulation(
-            nodes, make_scheduler("ec(6,3)"), items, SimConfig(failure_schedule=sched, seed=1)
+            nodes, create_scheduler("ec(6,3)"), items, SimConfig(failure_schedule=sched, seed=1)
         )
         assert static.retained_fraction < 0.5
         assert dyn.retained_fraction > static.retained_fraction + 0.4
