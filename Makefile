@@ -1,6 +1,16 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
+## Opt-in 100k-node XL smoke lane (benchmarks/scale_cluster.py "xl"
+## section): off by default so the fast lanes stay fast; the gate
+## reports the xl.* metrics as skipped when the section is absent.
+## Enable per-invocation with `make bench-scale SCALE_XL=1` (nightly CI
+## runs with it set unconditionally).  Regenerate baselines with the
+## flag set (`make bench-baseline SCALE_XL=1`) so the gated xl digests
+## exist to compare against.
+SCALE_XL ?=
+export SCALE_XL
+
 .PHONY: verify test test-fast smoke-bench bench-check bench-baseline bench-serve bench-ec bench-scale
 
 ## Tier-1 gate: full test suite + smoke runs of the scheduling-overhead
@@ -45,7 +55,9 @@ bench-ec:
 ## Fast lane for the cluster-scale axis alone: the 10k-node top-M
 ## pre-filter lane (filtered-vs-unfiltered decision-cost speedups,
 ## bit-exactness, pre-filter hit rate, >= 5x acceptance floor), gated
-## against its committed smoke baseline.
+## against its committed smoke baseline.  Add SCALE_XL=1 to grow the
+## oracle-free 100k lane (placement digests, argsort-path bit-exactness
+## replay, tracker hit-rate floor, within-2x-of-10k cost ceiling).
 bench-scale:
 	$(PYTHON) -m benchmarks.run --only scale --smoke \
 		--out results/benchmarks/ci-smoke \

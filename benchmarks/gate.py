@@ -140,6 +140,15 @@ GATE_METRICS: dict[str, tuple[tuple, ...]] = {
     # The rack-event scenario pins the constrained placement path at
     # 10k nodes: blast radius (within_parity/worst_rack_chunks) and the
     # constrained-decisions digest are seeded and deterministic.
+    # The 100k XL smoke lane (SCALE_XL=1; scale_cluster's "xl" section)
+    # is gated oracle-free: placement digests and the argsort-path
+    # replay are deterministic (seeded streams) and equality-gated; the
+    # hit-rate floor and the 100k-vs-10k per-decision cost ceiling are
+    # booleans computed from machine-cancelling in-process ratios, so
+    # they are equality-gated at 1; unfiltered_reference_ran is a
+    # constant 0 that pins the lane as oracle-free by construction.
+    # The fast lane runs without SCALE_XL, so the section is absent and
+    # every xl.* metric is reported as a skipped note, never a failure.
     "scale": (
         ("schedulers.drex_sc.filtered_speedup", "higher"),
         ("schedulers.drex_lb.filtered_speedup", "higher"),
@@ -151,6 +160,21 @@ GATE_METRICS: dict[str, tuple[tuple, ...]] = {
         ("rack_event.within_parity", "equal"),
         ("rack_event.worst_rack_chunks", "equal"),
         ("rack_event.placements_digest", "equal"),
+        ("xl.drex_sc.placements_digest", "equal"),
+        ("xl.drex_sc.matches_argsort_path", "equal"),
+        ("xl.drex_sc.meets_hit_rate_floor", "equal"),
+        ("xl.drex_sc.cost_within_2x_of_10k", "equal"),
+        ("xl.drex_sc.unfiltered_reference_ran", "equal"),
+        ("xl.drex_lb.placements_digest", "equal"),
+        ("xl.drex_lb.matches_argsort_path", "equal"),
+        ("xl.drex_lb.meets_hit_rate_floor", "equal"),
+        ("xl.drex_lb.cost_within_2x_of_10k", "equal"),
+        ("xl.drex_lb.unfiltered_reference_ran", "equal"),
+        ("xl.greedy_least_used.placements_digest", "equal"),
+        ("xl.greedy_least_used.matches_argsort_path", "equal"),
+        ("xl.greedy_least_used.meets_hit_rate_floor", "equal"),
+        ("xl.greedy_least_used.cost_within_2x_of_10k", "equal"),
+        ("xl.greedy_least_used.unfiltered_reference_ran", "equal"),
     ),
     "serve_load": (
         ("drex_sc.rate_60.placements_digest", "equal"),

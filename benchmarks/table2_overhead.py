@@ -20,6 +20,12 @@ kernels (repro.core.greedy_kernel) at ``greedy_nodes`` nodes — the
 GreedyMinStorage decision-cost column is the headline number the
 benchmark-regression gate (benchmarks/gate.py) protects.
 
+The ``first_decision`` section (stamped before any other section warms
+a kernel) times the process's cold first batched placement — the XLA
+compile, or a persistent-cache read when ``REPRO_JIT_CACHE=1``
+(repro.core.jitcache) — against the in-process warm repeat, with the
+jit-cache status alongside so the two regimes are distinguishable.
+
 The ``batched_lb`` section does the same for the D-Rex LB kernel
 (repro.core.lb_kernel) at ``n_nodes`` and again at ``greedy_nodes``
 nodes; its decision-cost speedup is gated alongside SC's.  The section
@@ -63,6 +69,35 @@ def _cluster(n: int) -> ClusterView:
 ADAPTIVE = ("greedy_min_storage", "greedy_least_used", "drex_lb", "drex_sc")
 
 
+def _first_decision(n_nodes: int, batch: int, lines: list[str]) -> dict:
+    """Cold-vs-warm first-decision latency (must run before any other
+    section jits a kernel, while the process is genuinely cold).
+
+    Cold = the process's first batched placement, which pays the XLA
+    compile — from source, or from the persistent disk cache when
+    ``REPRO_JIT_CACHE=1`` (repro.core.jitcache) and a previous process
+    already compiled the same bucketed signature.  Warm = the same call
+    on a fresh engine, served by the in-process jit cache.  The stamped
+    ``jit_cache`` status says which regime the cold number measured.
+    """
+    items = [DataItem(i, 117.0, float(i), 365.0, 0.999) for i in range(batch)]
+    t0 = time.perf_counter()
+    PlacementEngine(_cluster(n_nodes), "greedy_least_used").place_many(items)
+    cold_ms = (time.perf_counter() - t0) * 1e3
+    t0 = time.perf_counter()
+    PlacementEngine(_cluster(n_nodes), "greedy_least_used").place_many(items)
+    warm_ms = (time.perf_counter() - t0) * 1e3
+    lines.append(csv_row("table2_first_decision_cold", cold_ms * 1e3, f"nodes={n_nodes}"))
+    lines.append(csv_row("table2_first_decision_warm", warm_ms * 1e3, f"nodes={n_nodes}"))
+    return {
+        "n_nodes": n_nodes,
+        "batch": batch,
+        "cold_ms": cold_ms,
+        "warm_ms": warm_ms,
+        "jit_cache": telemetry.snapshot().jit_cache,
+    }
+
+
 def run(
     sizes=(10, 50, 100, 500),
     reps: int = 3,
@@ -72,6 +107,7 @@ def run(
 ) -> list[str]:
     lines = []
     table = {}
+    table["first_decision"] = _first_decision(greedy_nodes, greedy_batch, lines)
     for algo in ADAPTIVE:
         table[algo] = {}
         for n in sizes:

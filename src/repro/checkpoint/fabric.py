@@ -59,10 +59,11 @@ class StorageFabric:
             if self.cluster.free_mb[node_id] < size_mb:
                 raise IOError(f"node {node_id} out of capacity")
             old = self._blobs[node_id].pop(key, None)
+            used = self.cluster.writable("used_mb")
             if old is not None:
-                self.cluster.used_mb[node_id] -= len(old) / 1e6
+                used[node_id] -= len(old) / 1e6
             self._blobs[node_id][key] = blob
-            self.cluster.used_mb[node_id] += size_mb
+            used[node_id] += size_mb
         if self.persist_dir:
             (self.persist_dir / f"node_{node_id}" / key).write_bytes(blob)
 
@@ -76,7 +77,7 @@ class StorageFabric:
         with self._lock:
             blob = self._blobs[node_id].pop(key, None)
             if blob is not None:
-                self.cluster.used_mb[node_id] -= len(blob) / 1e6
+                self.cluster.writable("used_mb")[node_id] -= len(blob) / 1e6
         if self.persist_dir:
             p = self.persist_dir / f"node_{node_id}" / key
             if p.exists():
@@ -89,7 +90,7 @@ class StorageFabric:
         with self._lock:
             self.cluster.fail_node(node_id)
             self._blobs[node_id].clear()
-            self.cluster.used_mb[node_id] = 0.0
+            self.cluster.writable("used_mb")[node_id] = 0.0
         if self.persist_dir:
             d = self.persist_dir / f"node_{node_id}"
             for f in d.glob("*"):
@@ -104,4 +105,4 @@ class StorageFabric:
             for f in d.glob("*"):
                 blob = f.read_bytes()
                 self._blobs[i][f.name] = blob
-                self.cluster.used_mb[i] += len(blob) / 1e6
+                self.cluster.writable("used_mb")[i] += len(blob) / 1e6

@@ -475,11 +475,36 @@ class GreedyLeastUsed(_KernelSchedulerMixin, Scheduler):
     #: vmapped DP O(batch * SCAN_CAP^2) instead of O(batch * L^2).
     SCAN_CAP = 32
 
+    def __init__(self):
+        #: incremental free-desc order across commit deltas (see
+        #: core/candidates); None forces the from-scratch argsort.
+        self._order_tracker: Optional[FreeOrderTracker] = FreeOrderTracker()
+
+    def observe_commit(self, node_ids, chunk_mb: float, cluster: ClusterView) -> None:
+        """Engine commit hook (see ``PlacementEngine._finalize``)."""
+        if self._order_tracker is not None:
+            self._order_tracker.observe_commit(node_ids, chunk_mb, cluster)
+
+    def observe_release(self, node_ids, chunk_mb: float, cluster: ClusterView) -> None:
+        """Engine release hook (release / abort_repair)."""
+        if self._order_tracker is not None:
+            self._order_tracker.observe_release(node_ids, chunk_mb, cluster)
+
+    def observe_churn(self, kind: str, node_ids, cluster: ClusterView) -> None:
+        """Membership-churn hook (fail / heal / join)."""
+        if self._order_tracker is not None:
+            self._order_tracker.observe_churn(kind, node_ids, cluster)
+
+    def _by_free(self, cluster: ClusterView) -> np.ndarray:
+        if self._order_tracker is None:
+            return self._live_sorted(cluster, cluster.free_mb)
+        return self._order_tracker.order(cluster)
+
     def _place_scalar(
         self, item: DataItem, cluster: ClusterView, ctx=None, constraints=None
     ) -> Decision:
         by_free = self._apply_constraints(
-            self._live_sorted(cluster, cluster.free_mb), cluster, constraints
+            self._by_free(cluster), cluster, constraints
         )
         L = len(by_free)
         if L < 2:
@@ -516,7 +541,7 @@ class GreedyLeastUsed(_KernelSchedulerMixin, Scheduler):
         self, items: list[DataItem], cluster: ClusterView, ctx, constraints=None
     ) -> list[Decision]:
         by_free = self._apply_constraints(
-            self._live_sorted(cluster, cluster.free_mb), cluster, constraints
+            self._by_free(cluster), cluster, constraints
         )
         L = len(by_free)
         if L < 2:
@@ -546,7 +571,9 @@ class GreedyLeastUsed(_KernelSchedulerMixin, Scheduler):
             probs_mat,
             np.array([it.size_mb for it in items], dtype=np.float64),
             np.array([it.reliability_target for it in items], dtype=np.float64),
-            cluster.free_mb[by_free_c],
+            # free space of the cap slice only: index-then-subtract is
+            # bitwise free_mb[by_free_c] without the O(N) materialize
+            cluster.capacity_mb[by_free_c] - cluster.used_mb[by_free_c],
         )
         decisions = []
         for row, item in enumerate(items):
@@ -654,6 +681,16 @@ class DRexLB(_KernelSchedulerMixin, Scheduler):
         """Engine commit hook (see ``PlacementEngine._finalize``)."""
         if self._order_tracker is not None:
             self._order_tracker.observe_commit(node_ids, chunk_mb, cluster)
+
+    def observe_release(self, node_ids, chunk_mb: float, cluster: ClusterView) -> None:
+        """Engine release hook (release / abort_repair)."""
+        if self._order_tracker is not None:
+            self._order_tracker.observe_release(node_ids, chunk_mb, cluster)
+
+    def observe_churn(self, kind: str, node_ids, cluster: ClusterView) -> None:
+        """Membership-churn hook (fail / heal / join)."""
+        if self._order_tracker is not None:
+            self._order_tracker.observe_churn(kind, node_ids, cluster)
 
     def _by_free(self, cluster: ClusterView) -> np.ndarray:
         if self._order_tracker is None:
@@ -970,6 +1007,23 @@ class DRexSC(Scheduler):
             self._order_tracker.observe_commit(node_ids, chunk_mb, cluster)
         if self._sat_tracker is not None:
             self._sat_tracker.observe_commit(node_ids, chunk_mb, cluster)
+
+    def observe_release(self, node_ids, chunk_mb: float, cluster: ClusterView) -> None:
+        """Engine release hook.  The saturation tracker's per-entry
+        scores are commit-shaped only; a release invalidates it (the
+        mirror would catch the mismatch anyway — this skips the failed
+        validation)."""
+        if self._order_tracker is not None:
+            self._order_tracker.observe_release(node_ids, chunk_mb, cluster)
+        if self._sat_tracker is not None:
+            self._sat_tracker.invalidate()
+
+    def observe_churn(self, kind: str, node_ids, cluster: ClusterView) -> None:
+        """Membership-churn hook (fail / heal / join)."""
+        if self._order_tracker is not None:
+            self._order_tracker.observe_churn(kind, node_ids, cluster)
+        if self._sat_tracker is not None:
+            self._sat_tracker.invalidate()  # live set changed
 
     def _by_free(self, cluster: ClusterView) -> np.ndarray:
         if self._order_tracker is None:

@@ -92,14 +92,14 @@ class BatchContext:
 
     def __init__(self, max_entries: int | None = None):
         self.max_entries = self.MAX_ENTRIES if max_entries is None else max_entries
-        self._fail_probs: dict[tuple[float, bytes], np.ndarray] = {}
+        self._fp_seen: set[tuple[float, int]] = set()
         self._frontiers: dict[tuple[bytes, float], ParityFrontier] = {}
         self._min_parity: dict[tuple[bytes, float], int] = {}
         self._rna_rows: dict[tuple[bytes, float, int], np.ndarray] = {}
         self.hits = 0
         self.misses = 0
 
-    def _bound(self, cache: dict) -> None:
+    def _bound(self, cache) -> None:
         # Plain clear-on-full: memoization is pure, so dropping entries
         # only costs recomputation, never correctness.
         if len(cache) >= self.max_entries:
@@ -108,17 +108,20 @@ class BatchContext:
     def fail_probs(self, cluster: ClusterView, delta_t_days: float) -> np.ndarray:
         """Per-node failure probabilities for one retention window.
 
-        Keyed on the AFR content as well as the window, so a context
-        accidentally shared across engines/clusters stays correct."""
-        key = (float(delta_t_days), cluster.afr.tobytes())
-        fp = self._fail_probs.get(key)
-        if fp is None:
-            self.misses += 1
-            fp = cluster.fail_probs(delta_t_days)
-            self._bound(self._fail_probs)
-            self._fail_probs[key] = fp
-        else:
+        Delegates to :meth:`ClusterView.fail_probs`, which caches per
+        ``delta_t`` against an AFR-content mirror with touched-entry
+        refresh — correct across AFR edits, joins and accidental sharing
+        of a context across engines/clusters, without hashing all N AFR
+        bytes per decision the way the old ``(delta_t, afr.tobytes())``
+        key did.  Hit/miss telemetry counts per (window, view)."""
+        fp = cluster.fail_probs(delta_t_days)
+        token = (float(delta_t_days), id(cluster))
+        if token in self._fp_seen:
             self.hits += 1
+        else:
+            self.misses += 1
+            self._bound(self._fp_seen)
+            self._fp_seen.add(token)
         return fp
 
     def frontier(self, sorted_fail_probs: np.ndarray, target: float) -> ParityFrontier:
@@ -237,6 +240,8 @@ class PlacementEngine:
         # validation, so the hook is an optimization, never a soundness
         # requirement.
         self._observe_commit = getattr(scheduler, "observe_commit", None)
+        self._observe_release = getattr(scheduler, "observe_release", None)
+        self._observe_churn = getattr(scheduler, "observe_churn", None)
         #: monotonic counter of state mutations made *through the engine*
         #: (commits, repairs, releases, rollbacks); snapshot epochs stamp
         #: it so readers can order views without comparing arrays.
@@ -570,13 +575,36 @@ class PlacementEngine:
 
     def _free_desc_order(self) -> np.ndarray:
         """Live node ids in free-space-descending order — the sort every
-        windowed-scoring scheduler's decisions are relative to.  Calls
-        the schedulers' own ``_live_sorted`` so the reuse-soundness
-        check and the schedulers can never disagree on key or
-        tie-breaking."""
+        windowed-scoring scheduler's decisions are relative to.  Served
+        from the scheduler's own candidate tracker when it keeps one
+        (same maintained array the scheduler sorts by, so the
+        reuse-soundness check and the scheduler can never disagree on
+        key or tie-breaking — and the per-commit check stops paying an
+        argsort); falls back to the from-scratch ``_live_sorted``."""
+        tracker = getattr(self.scheduler, "_order_tracker", None)
+        if tracker is not None:
+            return tracker.order(self.cluster)
         from .algorithms import Scheduler  # deferred: no import cycle
 
         return Scheduler._live_sorted(self.cluster, self.cluster.free_mb)
+
+    def observe_churn(self, kind: str, node_ids: Sequence[int]) -> None:
+        """Notify the scheduler's incremental trackers of a membership
+        event (``fail`` / ``heal`` / ``join``) applied to the cluster
+        through the owning plane (serve frontier, simulator).  Purely an
+        optimization: trackers self-heal via mirror validation if this
+        is never called."""
+        if self._observe_churn is not None:
+            self._observe_churn(kind, node_ids, self.cluster)
+
+    def observe_external_release(
+        self, node_ids: Sequence[int], chunk_mb: float
+    ) -> None:
+        """Notify the trackers of a release applied to the cluster
+        directly by the owning plane (e.g. the frontier's drop path).
+        Optimization only — trackers self-heal without it."""
+        if self._observe_release is not None:
+            self._observe_release(node_ids, chunk_mb, self.cluster)
 
     # -- repair ---------------------------------------------------------------
 
@@ -627,8 +655,11 @@ class PlacementEngine:
         self.stats["n_repairs_planned"] += 1
         commit = self.auto_commit if commit is None else commit
         if commit and plan.new_nodes:
-            self.cluster.used_mb[np.asarray(plan.new_nodes)] += plan.chunk_mb
+            self.cluster.charge(plan.new_nodes, plan.chunk_mb)
             self.mutation_seq += 1
+            if self._observe_commit is not None:
+                # same array op as a placement commit: replayable
+                self._observe_commit(plan.new_nodes, plan.chunk_mb, self.cluster)
             self.stats["repair_mb_committed"] += plan.repair_mb
             plan = dataclasses.replace(plan, committed=True)
         return plan
@@ -645,27 +676,29 @@ class PlacementEngine:
             alive = [n for n in plan.new_nodes if self.cluster.alive[n]]
             if alive:
                 self.cluster.release(alive, plan.chunk_mb)
+                if self._observe_release is not None:
+                    self._observe_release(alive, plan.chunk_mb, self.cluster)
             self.mutation_seq += 1
             self.stats["repair_mb_committed"] -= plan.repair_mb
 
     # -- commit / rollback ----------------------------------------------------
 
     def view_snapshot(self) -> ClusterView:
-        """Deep, read-only copy of the current cluster state.
+        """Read-only copy-on-write snapshot of the current cluster state.
 
         This is the mechanism behind the placement frontier's snapshot
         epochs (:mod:`repro.serve.placement.epochs`): readers hold a
         consistent view while placements keep mutating the live one.
-        Arrays are write-protected so a reader bug cannot corrupt a
-        published epoch."""
-        view = self.cluster.copy()
-        for arr in (
-            view.capacity_mb, view.used_mb, view.write_bw,
-            view.read_bw, view.afr, view.alive,
-            view.rack, view.zone,
-        ):
-            arr.setflags(write=False)
-        return view
+        Publishing is O(1) — the snapshot *shares* the live arrays and
+        both sides are write-protected; the live view copies a field
+        lazily on its next mutation of that field (see
+        :meth:`ClusterView.share_snapshot`), so an epoch costs one copy
+        per field that actually changes instead of eight O(N) copies per
+        window.  Snapshot arrays stay write-protected forever, so a
+        reader bug cannot corrupt a published epoch — and a direct
+        out-of-band write to the *live* arrays while they are shared
+        raises ``ValueError`` instead of silently mutating the epoch."""
+        return self.cluster.share_snapshot()
 
     def snapshot(self) -> tuple[np.ndarray, np.ndarray, dict, Optional[float]]:
         """Capture the mutable engine state (occupancy, liveness, stats,
@@ -683,8 +716,7 @@ class PlacementEngine:
         scheduler's ``smin_mb`` observation (which feeds D-Rex SC's
         saturation curve) are restored along with the cluster."""
         used, alive, stats, smin = snapshot
-        self.cluster.used_mb[:] = used
-        self.cluster.alive[:] = alive
+        self.cluster.restore(used, alive)
         self.mutation_seq += 1
         self.stats = dict(stats)
         if hasattr(self.scheduler, "smin_mb"):
@@ -701,6 +733,10 @@ class PlacementEngine:
         for current occupancy."""
         if record.committed and record.placement is not None:
             self.cluster.release(record.placement.node_ids, record.chunk_mb)
+            if self._observe_release is not None:
+                self._observe_release(
+                    record.placement.node_ids, record.chunk_mb, self.cluster
+                )
             self.mutation_seq += 1
             self.stats["mb_committed"] -= record.chunk_mb * record.placement.n
 
@@ -717,7 +753,10 @@ class PlacementEngine:
             raise RuntimeError(
                 f"{self.scheduler.name} placed on a dead node: {pl.node_ids}"
             )
-        if not np.all(self.cluster.free_mb[ids] >= chunk - 1e-6):
+        # index-then-subtract == free_mb[ids] bitwise, without the O(N)
+        # full-array materialize on every commit
+        free = self.cluster.capacity_mb[ids] - self.cluster.used_mb[ids]
+        if not np.all(free >= chunk - 1e-6):
             raise RuntimeError(
                 f"{self.scheduler.name} violated capacity ({chunk:.3f} MB chunk)"
             )

@@ -15,19 +15,18 @@ gates pin absolute placements), which rules out changing any summation
 order.  The trackers therefore never maintain floating-point *sums*
 incrementally:
 
-* :class:`FreeOrderTracker` maintains the free-desc *sort order*.  A
-  commit only changes the free space of the touched nodes, so the cached
-  order stays valid iff each touched node is still correctly ordered
-  against its cached neighbours — an O(p) adjacency check under the same
-  total order ``Scheduler._live_sorted`` realizes (free desc, ties by
-  ascending id; sortedness of every adjacent pair under a strict total
-  order implies the unique sorted arrangement, hence equality with what
-  a fresh stable argsort would return).  When valid, the O(L log L)
-  argsort is skipped; ``f_avg`` and the deviation terms are then
-  recomputed in O(L) over the *same* element order, which is bitwise
-  what the argsort path yields.  An unchanged order also keeps the
-  permuted fail-prob sequence identical, so :class:`BatchContext`
-  frontier hits survive the commit.
+* :class:`FreeOrderTracker` maintains the free-desc *sort order*.  It is
+  an alias of :class:`repro.core.candidates.CandidateTracker`, which
+  generalizes the original O(p) adjacency fast path (sortedness of every
+  adjacent pair under the strict ``(free desc, id asc)`` total order
+  implies the unique sorted arrangement, hence equality with a fresh
+  stable argsort) with an O(p log N) *splice* that repositions only the
+  touched nodes when they actually moved — instead of dropping the cache
+  and re-argsorting all N.  When the order is served from cache,
+  ``f_avg`` and the deviation terms are recomputed in O(L) over the
+  *same* element order, which is bitwise what the argsort path yields;
+  an unchanged order also keeps the permuted fail-prob sequence
+  identical, so :class:`BatchContext` frontier hits survive the commit.
 * :class:`SaturationTracker` caches D-Rex SC's per-node saturation
   scores in live-id order and refreshes only the touched entries after a
   commit (``saturation_score`` is elementwise, so a sliced recompute is
@@ -35,123 +34,31 @@ incrementally:
   the same left-to-right pairwise ``.sum()`` over the same value
   sequence the from-scratch path reduces.
 
-**Self-healing.**  Trackers mirror ``(used_mb, alive)`` and validate the
-mirror against the live view on every query (two vectorized array
-compares); any out-of-band mutation — failures, heals, joins, repairs,
-rollbacks, ``release`` — fails validation and triggers a from-scratch
-rebuild.  The engine feeds commits through ``Scheduler.observe_commit``
-(see ``PlacementEngine._finalize``); everything else is caught by
+**Self-healing.**  Trackers mirror ``(used_mb, alive)`` (one shared
+mirror implementation, ``repro.core.candidates._UsedMirror``) and
+validate the mirror against the live view on every query (two vectorized
+array compares); any out-of-band mutation — a direct array write, a
+rollback, a mutation whose observe hook was not called — fails
+validation and triggers a from-scratch rebuild.  The engine feeds
+commits through ``Scheduler.observe_commit`` (see
+``PlacementEngine._finalize``), releases through ``observe_release`` and
+membership churn through ``observe_churn``; everything else is caught by
 validation.  Exactness and reuse are pinned by
-tests/test_incremental_rescore.py.
+tests/test_incremental_rescore.py and tests/test_candidates.py.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
+from .candidates import CandidateTracker, _UsedMirror
 from .types import ClusterView
 
 __all__ = ["FreeOrderTracker", "SaturationTracker"]
 
-
-class _UsedMirror:
-    """Mirror of ``(used_mb, alive)`` that replays commit deltas with the
-    exact array op :meth:`ClusterView.commit` performs, so a mirror that
-    matched before a commit matches (bitwise) after it."""
-
-    def __init__(self):
-        self.used: np.ndarray | None = None
-        self.alive: np.ndarray | None = None
-
-    def capture(self, cluster: ClusterView) -> None:
-        self.used = cluster.used_mb.copy()
-        self.alive = cluster.alive.copy()
-
-    def matches(self, cluster: ClusterView) -> bool:
-        return (
-            self.used is not None
-            and self.used.shape == cluster.used_mb.shape
-            and np.array_equal(self.used, cluster.used_mb)
-            and np.array_equal(self.alive, cluster.alive)
-        )
-
-    def apply_commit(self, node_ids, chunk_mb: float) -> bool:
-        """Replay one commit; False when the mirror cannot absorb it."""
-        if self.used is None:
-            return False
-        ids = np.asarray(node_ids)
-        if ids.size == 0 or int(ids.max()) >= len(self.used):
-            return False
-        self.used[ids] += chunk_mb  # ClusterView.commit's exact op
-        return True
-
-
-class FreeOrderTracker:
-    """Maintains the free-desc live-node order across commit deltas.
-
-    :meth:`order` returns exactly what
-    ``Scheduler._live_sorted(cluster, cluster.free_mb)`` would; when the
-    cached order is provably still valid the argsort is skipped.  The
-    returned array is shared state — callers must not mutate it.
-    """
-
-    def __init__(self):
-        self._mirror = _UsedMirror()
-        self._by_free: np.ndarray | None = None
-        self._pos: np.ndarray | None = None  # node id -> position, -1 dead
-        self.hits = 0
-        self.rebuilds = 0
-
-    def invalidate(self) -> None:
-        self._by_free = None
-        self._pos = None
-        self._mirror.used = None
-
-    def order(self, cluster: ClusterView) -> np.ndarray:
-        if self._by_free is not None and self._mirror.matches(cluster):
-            self.hits += 1
-            return self._by_free
-        self.rebuilds += 1
-        ids = cluster.live_ids()
-        perm = np.argsort(-cluster.free_mb[ids], kind="stable")
-        self._by_free = ids[perm]
-        pos = np.full(cluster.n_nodes, -1, dtype=np.int64)
-        pos[self._by_free] = np.arange(len(self._by_free))
-        self._pos = pos
-        self._mirror.capture(cluster)
-        return self._by_free
-
-    def observe_commit(self, node_ids, chunk_mb: float, cluster: ClusterView) -> None:
-        """Fold one committed placement into the cached order.
-
-        The touched nodes' free space shrank; the order survives iff each
-        touched node still sorts correctly against its cached neighbours.
-        Any violation (or a commit the mirror cannot absorb) drops the
-        cache — the next query rebuilds from scratch.
-        """
-        if self._by_free is None:
-            return
-        if not self._mirror.apply_commit(node_ids, chunk_mb):
-            self.invalidate()
-            return
-        by, pos = self._by_free, self._pos
-        cap, used = cluster.capacity_mb, self._mirror.used
-
-        def before(a: int, b: int) -> bool:
-            # the _live_sorted total order: free desc, ties ascending id
-            fa, fb = cap[a] - used[a], cap[b] - used[b]
-            return fa > fb or (fa == fb and a < b)
-
-        for nid in node_ids:
-            nid = int(nid)
-            k = int(pos[nid]) if nid < len(pos) else -1
-            if (
-                k < 0
-                or (k > 0 and not before(int(by[k - 1]), nid))
-                or (k + 1 < len(by) and not before(nid, int(by[k + 1])))
-            ):
-                self.invalidate()
-                return
+#: Backward-compatible name: the free-desc order tracker was absorbed
+#: into the generalized candidate-order structure (see candidates.py).
+FreeOrderTracker = CandidateTracker
 
 
 class SaturationTracker:

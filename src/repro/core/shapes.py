@@ -40,6 +40,15 @@ from __future__ import annotations
 
 import threading
 
+from . import jitcache
+
+# Shapes is imported by every kernel module before its first jit trace,
+# so this is the one spot early enough to point jax's persistent
+# compilation cache at disk (opt-in via REPRO_JIT_CACHE=1; no-op — and
+# no jax import — otherwise).  Stable bucketed pads => stable static
+# signatures => the disk cache actually hits across processes.
+jitcache.configure()
+
 __all__ = [
     "ShapeBucketer",
     "batch_pad",

@@ -128,6 +128,15 @@ class ClusterView:
             zone=np.array([getattr(n, "zone", 0) for n in nodes], dtype=np.int64),
         )
 
+    #: fields shared (and write-protected) by :meth:`share_snapshot`.
+    _ARRAY_FIELDS = (
+        "capacity_mb", "used_mb", "write_bw", "read_bw",
+        "afr", "alive", "rack", "zone",
+    )
+
+    #: bound on cached ``fail_probs`` retention windows per view.
+    _MAX_FP_ANCHORS = 16
+
     @property
     def n_nodes(self) -> int:
         return int(self.capacity_mb.shape[0])
@@ -140,27 +149,133 @@ class ClusterView:
         return np.nonzero(self.alive)[0]
 
     def fail_probs(self, delta_t_days: float) -> np.ndarray:
+        """Per-node failure probabilities for one retention window.
+
+        Cached per ``delta_t`` against an AFR-content mirror, so repeated
+        decisions stop re-exponentiating all N rates: when the AFRs are
+        untouched the cached vector is returned; when some entries
+        changed (or the view grew by a join) only the touched tail/
+        entries are recomputed — ``pr_failure`` is elementwise, so the
+        sliced recompute is bit-equal to the full-array one.  Returned
+        arrays are write-protected shared state; callers must copy
+        before mutating."""
         from .reliability import pr_failure
 
-        return pr_failure(self.afr, delta_t_days / DAYS_PER_YEAR)
+        key = float(delta_t_days)
+        cache: dict = self.__dict__.setdefault("_fp_cache", {})
+        mirror: Optional[np.ndarray] = self.__dict__.get("_fp_afr")
+        afr = self.afr
+        if mirror is None or not (
+            mirror.shape == afr.shape and np.array_equal(mirror, afr)
+        ):
+            self._fp_refresh(mirror, cache)
+        fp = cache.get(key)
+        if fp is None:
+            if len(cache) >= self._MAX_FP_ANCHORS:
+                cache.clear()
+            fp = pr_failure(afr, key / DAYS_PER_YEAR)
+            fp = np.asarray(fp, dtype=np.float64)
+            fp.setflags(write=False)
+            cache[key] = fp
+        return fp
+
+    def _fp_refresh(self, mirror: Optional[np.ndarray], cache: dict) -> None:
+        """Touched-entry refresh of every cached fail-prob vector after
+        an AFR content change (edit or elastic join)."""
+        from .reliability import pr_failure
+
+        afr = self.afr
+        n = afr.shape[0]
+        if mirror is None or n < mirror.shape[0]:
+            cache.clear()  # shrink or first use: no prefix to reuse
+        else:
+            old = mirror.shape[0]
+            changed = np.nonzero(mirror != afr[:old])[0]
+            for key in list(cache):
+                vec = cache[key]
+                new = np.empty(n, dtype=np.float64)
+                new[:old] = vec
+                if changed.size:
+                    new[changed] = pr_failure(afr[changed], key / DAYS_PER_YEAR)
+                if n > old:
+                    new[old:] = pr_failure(afr[old:], key / DAYS_PER_YEAR)
+                new.setflags(write=False)
+                cache[key] = new
+        self.__dict__["_fp_afr"] = afr.copy()
+
+    # -- copy-on-write mutation plumbing ------------------------------------
+
+    def writable(self, name: str) -> np.ndarray:
+        """The named field array, un-shared for writing.
+
+        After :meth:`share_snapshot` the view's arrays are write-
+        protected (they are shared with the published snapshot); the
+        first mutation of a field copies it — the snapshot keeps the
+        original — and every mutator below routes through here.  Cost is
+        one flag check per mutation and one O(N) copy per field per
+        snapshot *only if the field actually changes*."""
+        arr = getattr(self, name)
+        if not arr.flags.writeable:
+            arr = arr.copy()
+            setattr(self, name, arr)
+            bufs = self.__dict__.get("_growth_bufs")
+            if bufs:  # the old growth buffer now backs the snapshot
+                bufs.pop(name, None)
+        return arr
+
+    def share_snapshot(self) -> "ClusterView":
+        """Read-only snapshot sharing this view's buffers (copy-on-write).
+
+        O(1): no array is copied at publish time.  Both the snapshot and
+        the live view's arrays become write-protected; the live view
+        un-shares a field lazily on its next mutation (see
+        :meth:`writable`), so a snapshot costs one copy per field that
+        actually changes afterwards — not eight O(N) copies per window.
+        Direct out-of-band writes to a shared array raise ``ValueError``
+        (loud, instead of silently corrupting a published epoch)."""
+        for name in self._ARRAY_FIELDS:
+            getattr(self, name).setflags(write=False)
+        return ClusterView(
+            self.capacity_mb, self.used_mb, self.write_bw, self.read_bw,
+            self.afr, self.alive, self.rack, self.zone,
+        )
+
+    # -- mutators ------------------------------------------------------------
 
     def commit(self, placement: Placement, chunk_mb: float) -> None:
         ids = np.asarray(placement.node_ids)
-        self.used_mb[ids] += chunk_mb
+        self.writable("used_mb")[ids] += chunk_mb
+
+    def charge(self, node_ids: Sequence[int], chunk_mb: float) -> None:
+        """Reserve ``chunk_mb`` on each node (repair reservations) —
+        the exact array op :meth:`commit` performs."""
+        self.writable("used_mb")[np.asarray(list(node_ids))] += chunk_mb
 
     def release(self, node_ids: Sequence[int], chunk_mb: float) -> None:
         ids = np.asarray(list(node_ids))
-        self.used_mb[ids] -= chunk_mb
-        np.maximum(self.used_mb, 0.0, out=self.used_mb)
+        used = self.writable("used_mb")
+        used[ids] -= chunk_mb
+        np.maximum(used, 0.0, out=used)
 
     def fail_node(self, node_id: int) -> None:
-        self.alive[node_id] = False
+        self.writable("alive")[node_id] = False
+
+    def fail_stop(self, node_id: int) -> None:
+        """Fail-stop: the node dies and its bytes are permanently lost
+        (the churn paths' canonical failure op)."""
+        self.writable("alive")[node_id] = False
+        self.writable("used_mb")[node_id] = 0.0
 
     def heal_node(self, node_id: int) -> None:
         """Fail-stop recovery: the node returns alive and *empty* (its
         chunks were permanently lost when it failed)."""
-        self.alive[node_id] = True
-        self.used_mb[node_id] = 0.0
+        self.writable("alive")[node_id] = True
+        self.writable("used_mb")[node_id] = 0.0
+
+    def restore(self, used_mb: np.ndarray, alive: np.ndarray) -> None:
+        """Overwrite occupancy/liveness from a snapshot (rollback)."""
+        self.writable("used_mb")[:] = used_mb
+        self.writable("alive")[:] = alive
 
     def nodes_in_rack(self, rack_id: int) -> np.ndarray:
         return np.nonzero(self.rack == rack_id)[0]
@@ -201,8 +316,15 @@ class ClusterView:
             buf = bufs.get(name)
             # Only reuse a buffer the current field array is a prefix view
             # of — anything else (fresh view, external rebinding, buffer
-            # full) reallocates with doubled headroom.
-            if buf is None or arr.base is not buf or buf.shape[0] <= nid:
+            # full, or an array shared read-only with a snapshot, whose
+            # backing buffer must not be written through) reallocates
+            # with doubled headroom.
+            if (
+                buf is None
+                or arr.base is not buf
+                or buf.shape[0] <= nid
+                or not arr.flags.writeable
+            ):
                 buf = np.empty(max(4, 2 * (nid + 1)), dtype=arr.dtype)
                 buf[:nid] = arr
                 bufs[name] = buf

@@ -39,6 +39,7 @@ correctness harness in tests/test_kernels.py).
 from __future__ import annotations
 
 import functools
+import threading as _threading
 
 import numpy as np
 import jax
@@ -72,8 +73,20 @@ MATRIX_CACHE_SIZE = 256
 CENSUS_KERNEL = "rs_bitmatmul"
 
 #: build counters behind the LRU caches (the counter hook the cache
-#: tests pin "built exactly once" against).
+#: tests pin "built exactly once" against).  ``lru_cache`` does NOT hold
+#: its lock while the wrapped builder runs, so two threads missing the
+#: same key concurrently (the serve frontier's worker threads do) both
+#: execute the builder — a bare ``+= 1`` here is a read-modify-write
+#: race that loses increments.  All counter updates go through
+#: :func:`_note_build` under ``_builds_lock``; regression:
+#: tests/test_threaded_counters.py.
 _MATRIX_BUILDS = {"encode": 0, "decode": 0}
+_builds_lock = _threading.Lock()
+
+
+def _note_build(kind: str) -> None:
+    with _builds_lock:
+        _MATRIX_BUILDS[kind] += 1
 
 
 @functools.lru_cache(maxsize=MATRIX_CACHE_SIZE)
@@ -81,7 +94,7 @@ def _encode_matrices(k: int, p: int):
     """(Cauchy GF matrix, (8P, 8K) f32 bit matrix) for encode — cached.
 
     The numpy matrix is returned read-only: cached arrays are shared."""
-    _MATRIX_BUILDS["encode"] += 1
+    _note_build("encode")
     cauchy = gf256.cauchy_matrix(p, k)
     cauchy.setflags(write=False)
     bitm = jnp.asarray(gf256.gf_to_bitmatrix(cauchy), dtype=jnp.float32)
@@ -93,7 +106,7 @@ def _decode_matrices(k: int, p: int, rows: tuple):
     """(decode GF matrix, (8K, 8K) f32 bit matrix) for one erasure
     pattern — cached so repeated decodes of the same pattern pay the
     Gauss-Jordan inversion exactly once."""
-    _MATRIX_BUILDS["decode"] += 1
+    _note_build("decode")
     dec = gf256.decode_matrix(k, p, np.asarray(rows, dtype=np.int64))
     dec.setflags(write=False)
     bitm = jnp.asarray(gf256.gf_to_bitmatrix(dec), dtype=jnp.float32)
@@ -103,9 +116,12 @@ def _decode_matrices(k: int, p: int, rows: tuple):
 def matrix_cache_stats() -> dict:
     """Telemetry: matrix builds vs cache hits (see MATRIX_CACHE_SIZE)."""
     enc, dec = _encode_matrices.cache_info(), _decode_matrices.cache_info()
+    with _builds_lock:
+        encode_builds = _MATRIX_BUILDS["encode"]
+        decode_builds = _MATRIX_BUILDS["decode"]
     return {
-        "encode_builds": _MATRIX_BUILDS["encode"],
-        "decode_builds": _MATRIX_BUILDS["decode"],
+        "encode_builds": encode_builds,
+        "decode_builds": decode_builds,
         "encode_cache": {"hits": enc.hits, "misses": enc.misses,
                          "size": enc.currsize, "maxsize": enc.maxsize},
         "decode_cache": {"hits": dec.hits, "misses": dec.misses,
@@ -117,8 +133,9 @@ def reset_matrix_caches() -> None:
     """Clear the matrix caches and build counters (tests)."""
     _encode_matrices.cache_clear()
     _decode_matrices.cache_clear()
-    _MATRIX_BUILDS["encode"] = 0
-    _MATRIX_BUILDS["decode"] = 0
+    with _builds_lock:
+        _MATRIX_BUILDS["encode"] = 0
+        _MATRIX_BUILDS["decode"] = 0
 
 
 def _rows_key(surviving_rows) -> tuple:

@@ -350,8 +350,8 @@ class PlacementFrontier:
         cluster = self.engine.cluster
         if node_id >= cluster.n_nodes or not cluster.alive[node_id]:
             return
-        cluster.alive[node_id] = False
-        cluster.used_mb[node_id] = 0.0
+        cluster.fail_stop(node_id)
+        self.engine.observe_churn("fail", [node_id])
         self.metrics.n_failures += 1
         affected = [
             si for si in self.stored.values() if node_id in si.placement.node_ids
@@ -383,15 +383,19 @@ class PlacementFrontier:
             self.metrics.n_repairs += 1
             return
         cluster = self.engine.cluster
-        for n in plan.survivors:
-            if cluster.alive[n]:
-                cluster.used_mb[n] = max(0.0, cluster.used_mb[n] - si.chunk_mb)
+        alive_survivors = [n for n in plan.survivors if cluster.alive[n]]
+        if alive_survivors:
+            # release == per-entry subtract + clamp-at-zero, bitwise what
+            # the old per-node max(0, used - chunk) loop computed
+            cluster.release(alive_survivors, si.chunk_mb)
+            self.engine.observe_external_release(alive_survivors, si.chunk_mb)
         self.metrics.n_items_lost += 1
         self.metrics.mb_lost += si.item.size_mb
         del self.stored[si.item.item_id]
 
     def _on_join(self, t: float, node: StorageNode) -> None:
-        self.engine.cluster.add_node(node)
+        nid = self.engine.cluster.add_node(node)
+        self.engine.observe_churn("join", [nid])
         self.metrics.n_joins += 1
         self.epochs.publish(self.engine, t)
 
@@ -400,5 +404,6 @@ class PlacementFrontier:
         if node_id >= cluster.n_nodes or cluster.alive[node_id]:
             return
         cluster.heal_node(node_id)
+        self.engine.observe_churn("heal", [node_id])
         self.metrics.n_heals += 1
         self.epochs.publish(self.engine, t)

@@ -299,6 +299,7 @@ class Simulator:
         """Elastic join: the node becomes a placement/repair candidate for
         every subsequent decision."""
         nid = self.cluster.add_node(node)
+        self.engine.observe_churn("join", [nid])
         self.nodes.append(node)
         return nid
 
@@ -307,6 +308,7 @@ class Simulator:
         if self.cluster.alive[node_id]:
             return
         self.cluster.heal_node(node_id)
+        self.engine.observe_churn("heal", [node_id])
         self._repair_free_at[node_id] = 0.0
 
     # -- failure path (§5.7) --------------------------------------------------
@@ -347,9 +349,9 @@ class Simulator:
         day = max(float(day), self._now)
         for nid in dead:
             self.used_mb_at_failure[nid] = float(self.cluster.used_mb[nid])
-            self.cluster.alive[nid] = False
-            self.cluster.used_mb[nid] = 0.0
+            self.cluster.fail_stop(nid)
             self.n_node_failures += 1
+        self.engine.observe_churn("fail", dead)
         dead_set = set(dead)
         # Two passes: first void every in-flight repair these failures
         # touch (a reconstruction source or replacement target died),
@@ -489,11 +491,12 @@ class Simulator:
         """Permanently lose an item; ``holding`` names the nodes that
         still carry its chunks (defaults to the full placement)."""
         nodes = si.placement.node_ids if holding is None else holding
-        for n in nodes:
-            if self.cluster.alive[n]:
-                self.cluster.used_mb[n] = max(
-                    0.0, self.cluster.used_mb[n] - si.chunk_mb
-                )
+        alive_holding = [n for n in nodes if self.cluster.alive[n]]
+        if alive_holding:
+            # release == per-entry subtract + clamp-at-zero, bitwise what
+            # the old per-node max(0, used - chunk) loop computed
+            self.cluster.release(alive_holding, si.chunk_mb)
+            self.engine.observe_external_release(alive_holding, si.chunk_mb)
         self.dropped_mb += si.item.size_mb
         pend = self._pending.pop(si.item.item_id, None)
         if pend is not None:

@@ -1,12 +1,13 @@
 """One facade over the library's introspection surfaces.
 
-Four subsystems keep counters that benchmarks and the gated lanes stamp
+Five subsystems keep counters that benchmarks and the gated lanes stamp
 into JSON: the top-M pre-filter (:func:`repro.core.prefilter.stats`),
 the EC coefficient-matrix caches
 (:func:`repro.kernels.ops.matrix_cache_stats`), the shape-bucketer
-compile census (:func:`repro.core.shapes.compile_cache_stats`), and the
+compile census (:func:`repro.core.shapes.compile_cache_stats`), the
 per-engine :class:`~repro.core.engine.PlacementEngine` decision counters
-(``engine.stats``).  Importing each module ad hoc couples every
+(``engine.stats``), and the opt-in persistent XLA compilation cache
+(:func:`repro.core.jitcache.status`).  Importing each module ad hoc couples every
 benchmark to four internal layouts; this facade freezes one stable
 schema (:class:`TelemetrySnapshot`) behind :func:`snapshot` /
 :func:`reset`.
@@ -48,6 +49,9 @@ class TelemetrySnapshot:
     #: (placements, rejections, constraint swaps, repair gauges), or
     #: ``None`` when no engine was given.
     engine: Optional[dict[str, Any]] = None
+    #: persistent XLA compilation-cache state —
+    #: ``repro.core.jitcache.status()`` (opt-in via REPRO_JIT_CACHE=1).
+    jit_cache: Optional[dict[str, Any]] = None
 
     def as_dict(self) -> dict[str, Any]:
         """Plain-dict view for JSON stamping."""
@@ -58,7 +62,7 @@ def snapshot(engine=None) -> TelemetrySnapshot:
     """Copy every introspection surface; pass a
     :class:`~repro.core.engine.PlacementEngine` to include its
     per-instance decision counters."""
-    from repro.core import prefilter, shapes
+    from repro.core import jitcache, prefilter, shapes
     from repro.kernels import ops as kops
 
     return TelemetrySnapshot(
@@ -66,6 +70,7 @@ def snapshot(engine=None) -> TelemetrySnapshot:
         matrix_cache=kops.matrix_cache_stats(),
         compile_cache=shapes.compile_cache_stats(),
         engine=dict(engine.stats) if engine is not None else None,
+        jit_cache=jitcache.status(),
     )
 
 

@@ -1,0 +1,287 @@
+"""Property + unit pins for the incremental candidate order
+(repro.core.candidates.CandidateTracker).
+
+The contract: ``tracker.order(cluster)`` is **bit-identical** to a fresh
+``Scheduler._live_sorted(cluster, cluster.free_mb)`` — live node ids,
+free-space-descending, ascending-id tie-break — after *any* interleaving
+of the cluster's mutation vocabulary (commit / release / fail / heal /
+join / rollback), whether or not the matching observe hook was called.
+Hooks only buy reuse; out-of-band mutations self-heal via the mirror.
+
+The property tests drive random op tapes (hypothesis when installed,
+the deterministic stub otherwise) including the adversarial corners:
+equal-free-space tie churn and dead-node resurrection.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # dev-only dep (requirements-dev.txt); keep invariants running
+    from _hypothesis_stub import given, settings, strategies as st
+
+from repro.core import ClusterView, StorageNode
+from repro.core.candidates import CandidateTracker
+
+
+def _node(i, cap, afr=0.01):
+    return StorageNode(
+        node_id=i,
+        capacity_mb=float(cap),
+        write_bw=150.0,
+        read_bw=200.0,
+        annual_failure_rate=float(afr),
+    )
+
+
+def _cluster(n=10, seed=3, equal_caps=False):
+    rng = np.random.default_rng(seed)
+    return ClusterView.from_nodes(
+        [
+            _node(i, 1e5 if equal_caps else rng.uniform(2e4, 2e5))
+            for i in range(n)
+        ]
+    )
+
+
+def _oracle(cluster):
+    """Fresh ``_live_sorted(cluster, cluster.free_mb)``."""
+    ids = cluster.live_ids()
+    return ids[np.argsort(-cluster.free_mb[ids], kind="stable")]
+
+
+def _placement(node_ids):
+    return dataclasses.make_dataclass("P", ["node_ids"])(list(node_ids))
+
+
+# Op tape vocabulary for the property tests.  Each opcode picks targets
+# from the drawn rng so a single integer list encodes a full scenario.
+_OPS = ("commit", "release", "fail", "heal", "join", "rollback", "oob")
+
+
+def _apply(op, cluster, tracker, rng, snap):
+    """Apply one op to the cluster, notifying the tracker through the
+    same hook vocabulary the engine uses (or none, for rollback/oob)."""
+    n = cluster.n_nodes
+    if op == "commit":
+        k = int(rng.integers(1, min(4, n) + 1))
+        ids = sorted(int(x) for x in rng.choice(n, size=k, replace=False))
+        chunk = float(rng.uniform(1.0, 500.0))
+        cluster.charge(ids, chunk)
+        tracker.observe_commit(ids, chunk, cluster)
+    elif op == "release":
+        k = int(rng.integers(1, min(4, n) + 1))
+        ids = sorted(int(x) for x in rng.choice(n, size=k, replace=False))
+        chunk = float(rng.uniform(1.0, 500.0))
+        cluster.release(ids, chunk)
+        tracker.observe_release(ids, chunk, cluster)
+    elif op == "fail":
+        live = cluster.live_ids()
+        if live.size <= 2:
+            return snap
+        nid = int(rng.choice(live))
+        cluster.fail_stop(nid)
+        tracker.observe_churn("fail", [nid], cluster)
+    elif op == "heal":
+        dead = np.nonzero(~cluster.alive)[0]
+        if dead.size == 0:
+            return snap
+        nid = int(rng.choice(dead))  # dead-node resurrection
+        cluster.heal_node(nid)
+        tracker.observe_churn("heal", [nid], cluster)
+    elif op == "join":
+        nid = cluster.add_node(_node(n, float(rng.uniform(2e4, 2e5))))
+        tracker.observe_churn("join", [nid], cluster)
+    elif op == "rollback":
+        # out-of-band restore (engine.rollback's op): no hook exists;
+        # the tracker must self-heal via the mirror mismatch
+        cluster.restore(*snap) if snap else None
+    elif op == "oob":
+        # bare array write with no notification at all
+        nid = int(rng.integers(0, n))
+        cluster.writable("used_mb")[nid] = float(rng.uniform(0.0, 1e4))
+    return (cluster.used_mb.copy(), cluster.alive.copy())
+
+
+class TestOrderProperty:
+    @settings(max_examples=25)
+    @given(
+        tape=st.lists(st.integers(0, len(_OPS) - 1), min_size=4, max_size=30),
+        seed=st.integers(0, 10_000),
+    )
+    def test_random_interleavings_bit_identical(self, tape, seed):
+        rng = np.random.default_rng(seed)
+        cluster = _cluster(10, seed=seed % 97)
+        tracker = CandidateTracker()
+        m = 5
+        snap = (cluster.used_mb.copy(), cluster.alive.copy())
+        assert np.array_equal(tracker.order(cluster), _oracle(cluster))
+        for code in tape:
+            snap = _apply(_OPS[code], cluster, tracker, rng, snap)
+            want = _oracle(cluster)
+            assert np.array_equal(tracker.order(cluster), want)
+            assert np.array_equal(tracker.topm(cluster, m), want[:m])
+
+    @settings(max_examples=25)
+    @given(
+        tape=st.lists(st.integers(0, len(_OPS) - 1), min_size=4, max_size=30),
+        seed=st.integers(0, 10_000),
+    )
+    def test_equal_capacity_tie_churn(self, tape, seed):
+        """All capacities equal: every delta creates/destroys key ties,
+        hammering the ascending-id tie-break on both the fast path's
+        adjacency check and the splice's in-tie bisect."""
+        rng = np.random.default_rng(seed)
+        cluster = _cluster(8, seed=seed % 89, equal_caps=True)
+        tracker = CandidateTracker()
+        snap = (cluster.used_mb.copy(), cluster.alive.copy())
+        for code in tape:
+            snap = _apply(_OPS[code], cluster, tracker, rng, snap)
+            assert np.array_equal(tracker.order(cluster), _oracle(cluster))
+
+    @settings(max_examples=15)
+    @given(seed=st.integers(0, 10_000))
+    def test_query_between_every_op_vs_query_once(self, seed):
+        """Querying after every op and querying only at the end must
+        land on the same final order (splices commute with batching)."""
+        rng1 = np.random.default_rng(seed)
+        rng2 = np.random.default_rng(seed)
+        c1, c2 = _cluster(9, seed=7), _cluster(9, seed=7)
+        t1, t2 = CandidateTracker(), CandidateTracker()
+        t1.order(c1), t2.order(c2)
+        ops = ["commit", "fail", "commit", "heal", "join", "release", "commit"]
+        for op in ops:
+            _apply(op, c1, t1, rng1, None)
+            t1.order(c1)  # query eagerly
+            _apply(op, c2, t2, rng2, None)  # query only at the end
+        assert np.array_equal(t1.order(c1), t2.order(c2))
+        assert np.array_equal(t2.order(c2), _oracle(c2))
+
+
+class TestTrackerMechanics:
+    def test_fast_path_no_splice_no_rebuild(self):
+        """A commit that provably cannot reorder (top node, less than its
+        margin) must be absorbed in place: no splice, no rebuild."""
+        cluster = _cluster(8)
+        tr = CandidateTracker()
+        first = tr.order(cluster)
+        top, runner = int(first[0]), int(first[1])
+        margin = float(cluster.free_mb[top] - cluster.free_mb[runner])
+        cluster.charge([top], margin / 2)
+        tr.observe_commit([top], margin / 2, cluster)
+        assert np.array_equal(tr.order(cluster), _oracle(cluster))
+        assert tr.rebuilds == 1 and tr.splices == 0 and tr.hits >= 1
+
+    def test_reorder_served_by_splice_not_rebuild(self):
+        """Pushing the top node below the runner-up violates adjacency:
+        the next query splices — the argsort never reruns."""
+        cluster = _cluster(8)
+        tr = CandidateTracker()
+        first = tr.order(cluster)
+        top, runner = int(first[0]), int(first[1])
+        delta = float(cluster.free_mb[top] - cluster.free_mb[runner]) + 1.0
+        cluster.charge([top], delta)
+        tr.observe_commit([top], delta, cluster)
+        got = tr.order(cluster)
+        assert np.array_equal(got, _oracle(cluster))
+        assert int(got[0]) == runner
+        assert tr.rebuilds == 1 and tr.splices == 1
+
+    def test_join_grows_order(self):
+        cluster = _cluster(6)
+        tr = CandidateTracker()
+        tr.order(cluster)
+        nid = cluster.add_node(_node(6, 9e5))  # most-free newcomer
+        tr.observe_churn("join", [nid], cluster)
+        got = tr.order(cluster)
+        assert np.array_equal(got, _oracle(cluster))
+        assert int(got[0]) == nid
+        assert tr.rebuilds == 1  # grown via splice, not argsort
+
+    def test_fail_then_heal_round_trip(self):
+        cluster = _cluster(6)
+        tr = CandidateTracker()
+        first = tr.order(cluster)
+        victim = int(first[2])
+        cluster.fail_stop(victim)
+        tr.observe_churn("fail", [victim], cluster)
+        assert victim not in tr.order(cluster)
+        cluster.heal_node(victim)
+        tr.observe_churn("heal", [victim], cluster)
+        got = tr.order(cluster)
+        assert victim in got
+        assert np.array_equal(got, _oracle(cluster))
+        assert tr.rebuilds == 1
+
+    def test_out_of_band_write_self_heals(self):
+        cluster = _cluster(6)
+        tr = CandidateTracker()
+        tr.order(cluster)
+        cluster.writable("used_mb")[1] += 777.0  # never observed
+        assert np.array_equal(tr.order(cluster), _oracle(cluster))
+        assert tr.rebuilds == 2
+
+    def test_unknown_churn_kind_invalidates(self):
+        cluster = _cluster(6)
+        tr = CandidateTracker()
+        tr.order(cluster)
+        tr.observe_churn("repartition", [0], cluster)
+        assert tr._order is None
+        assert np.array_equal(tr.order(cluster), _oracle(cluster))
+
+    def test_hit_rate_reported(self):
+        cluster = _cluster(6)
+        tr = CandidateTracker()
+        assert tr.hit_rate() == 0.0
+        for _ in range(9):
+            tr.order(cluster)
+        assert tr.hit_rate() == pytest.approx(8 / 9)
+
+
+class TestFailProbsCache:
+    def _oracle(self, cluster, dt):
+        from repro.core.reliability import pr_failure
+        from repro.core.types import DAYS_PER_YEAR
+
+        return np.asarray(
+            pr_failure(cluster.afr, dt / DAYS_PER_YEAR), dtype=np.float64
+        )
+
+    def test_cached_vector_reused_and_exact(self):
+        cluster = _cluster(8)
+        a = cluster.fail_probs(30.0)
+        b = cluster.fail_probs(30.0)
+        assert a is b  # same object: no recompute
+        assert np.array_equal(a, self._oracle(cluster, 30.0))
+        with pytest.raises(ValueError):
+            a[0] = 0.5  # published vectors are write-protected
+
+    def test_afr_edit_recomputes_touched_entries_exactly(self):
+        cluster = _cluster(8)
+        before = cluster.fail_probs(30.0)
+        cluster.writable("afr")[3] = 0.25
+        after = cluster.fail_probs(30.0)
+        assert after is not before
+        assert np.array_equal(after, self._oracle(cluster, 30.0))
+        # untouched entries keep their exact bits
+        mask = np.ones(8, dtype=bool)
+        mask[3] = False
+        assert np.array_equal(after[mask], before[mask])
+
+    def test_join_extends_cached_vectors(self):
+        cluster = _cluster(8)
+        before = cluster.fail_probs(30.0)
+        cluster.add_node(_node(8, 5e4, afr=0.2))
+        after = cluster.fail_probs(30.0)
+        assert after.shape == (9,)
+        assert np.array_equal(after[:8], before)
+        assert np.array_equal(after, self._oracle(cluster, 30.0))
+
+    def test_anchor_bound(self):
+        cluster = _cluster(4)
+        for k in range(3 * ClusterView._MAX_FP_ANCHORS):
+            cluster.fail_probs(float(k + 1))
+            assert len(cluster.__dict__["_fp_cache"]) <= ClusterView._MAX_FP_ANCHORS

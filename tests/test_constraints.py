@@ -298,13 +298,22 @@ class TestTelemetryFacade:
         from repro.core import prefilter, shapes
         from repro.kernels import ops as kops
 
+        from repro.core import jitcache
+
         snap = telemetry.snapshot()
         assert snap.engine is None
         assert set(snap.matrix_cache) == set(kops.matrix_cache_stats())
         assert set(snap.compile_cache) == set(shapes.compile_cache_stats())
         assert snap.prefilter == prefilter.stats()
+        assert set(snap.jit_cache) == set(jitcache.status())
         d = snap.as_dict()
-        assert set(d) == {"prefilter", "matrix_cache", "compile_cache", "engine"}
+        assert set(d) == {
+            "prefilter",
+            "matrix_cache",
+            "compile_cache",
+            "engine",
+            "jit_cache",
+        }
 
     def test_snapshot_includes_engine_counters(self):
         engine = PlacementEngine(

@@ -282,8 +282,16 @@ class TestEpochConsistency:
         frontier, _ = _run("greedy_least_used")
         epoch = frontier.read()
         before = epoch.cluster.used_mb.copy()
-        frontier.engine.cluster.used_mb[0] += 999.0  # out-of-band write
+        live = frontier.engine.cluster
+        # Published epochs share buffers copy-on-write: a direct
+        # out-of-band write to the live arrays must fault loudly ...
+        with pytest.raises(ValueError):
+            live.used_mb[0] += 999.0
+        # ... while API-routed mutation copies first, leaving every
+        # previously published epoch untouched.
+        live.writable("used_mb")[0] += 999.0
         assert np.array_equal(epoch.cluster.used_mb, before)
+        assert live.used_mb[0] == before[0] + 999.0
 
     def test_epochs_bracket_failures(self):
         """Reads never see a half-applied failure: some published epoch

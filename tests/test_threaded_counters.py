@@ -1,0 +1,153 @@
+"""Thread-safety regressions for the shared telemetry counters.
+
+The serve frontier scores placements from a worker-thread pool, so the
+module-level counters it bumps are hit concurrently:
+
+* ``repro.core.prefilter`` per-scheduler event counters — guarded by the
+  module ``_lock``;
+* ``repro.kernels.ops._MATRIX_BUILDS`` — ``lru_cache`` does NOT hold its
+  internal lock while the wrapped builder runs, so two threads missing
+  the same key both execute the builder; a bare ``+= 1`` there is a
+  read-modify-write race that loses increments.  Builds are counted via
+  ``_note_build`` under ``_builds_lock``.
+
+These tests hammer both from many threads and pin the exact totals.
+A lost-update race is probabilistic, so they use enough increments per
+thread that an unguarded ``+=`` fails in practice (verified by breaking
+the lock locally), while staying fast when the code is correct.
+"""
+
+import threading
+
+import pytest
+
+from repro.core import prefilter
+from repro.kernels import ops
+
+N_THREADS = 8
+N_PER_THREAD = 2_000
+
+
+def _hammer(fn):
+    """Run ``fn(thread_index)`` from N_THREADS threads, starting on a
+    barrier so the increments genuinely overlap."""
+    barrier = threading.Barrier(N_THREADS)
+    errors = []
+
+    def runner(t):
+        try:
+            barrier.wait()
+            fn(t)
+        except Exception as exc:  # pragma: no cover - failure reporting
+            errors.append(exc)
+
+    threads = [threading.Thread(target=runner, args=(t,)) for t in range(N_THREADS)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert not errors, errors
+
+
+class TestPrefilterCounters:
+    def setup_method(self):
+        prefilter.reset_stats()
+
+    def teardown_method(self):
+        prefilter.reset_stats()
+
+    def test_concurrent_record_exact_totals(self):
+        def work(t):
+            # every thread mixes schedulers and events, forcing
+            # concurrent setdefault + increment on shared dicts
+            for i in range(N_PER_THREAD):
+                prefilter.record("drex_sc", "engaged")
+                prefilter.record("drex_lb", "accepted", 2)
+                if i % 4 == 0:
+                    prefilter.record("drex_sc", "fallback")
+
+        _hammer(work)
+        s = prefilter.stats()
+        assert s["drex_sc"]["engaged"] == N_THREADS * N_PER_THREAD
+        assert s["drex_sc"]["fallback"] == N_THREADS * (N_PER_THREAD // 4)
+        assert s["drex_lb"]["accepted"] == 2 * N_THREADS * N_PER_THREAD
+
+    def test_concurrent_stats_reads_are_safe_snapshots(self):
+        stop = threading.Event()
+        seen = []
+
+        def reader():
+            while not stop.is_set():
+                snap = prefilter.stats()
+                # a snapshot is a copy: mutating it must not corrupt
+                for per in snap.values():
+                    per["engaged"] = -1
+                seen.append(snap)
+
+        rt = threading.Thread(target=reader)
+        rt.start()
+        try:
+            _hammer(lambda t: [prefilter.record("greedy", "bypassed")
+                               for _ in range(N_PER_THREAD)])
+        finally:
+            stop.set()
+            rt.join()
+        assert prefilter.stats()["greedy"]["bypassed"] == N_THREADS * N_PER_THREAD
+
+
+class TestMatrixBuildCounters:
+    def setup_method(self):
+        ops.reset_matrix_caches()
+
+    def teardown_method(self):
+        ops.reset_matrix_caches()
+
+    def test_note_build_exact_under_contention(self):
+        """The raw counter hook: N_THREADS * N_PER_THREAD increments
+        from overlapping threads must all land (the unguarded ``+=``
+        this replaced loses a measurable fraction of them)."""
+
+        def work(t):
+            for _ in range(N_PER_THREAD):
+                ops._note_build("encode" if t % 2 == 0 else "decode")
+
+        _hammer(work)
+        stats = ops.matrix_cache_stats()
+        half = (N_THREADS // 2) * N_PER_THREAD
+        assert stats["encode_builds"] == half
+        assert stats["decode_builds"] == half
+
+    def test_concurrent_builders_and_stats_readers(self):
+        """Worker threads racing real cached builders (distinct and
+        shared keys) while another thread polls matrix_cache_stats:
+        totals stay consistent and every build is counted."""
+        stop = threading.Event()
+
+        def reader():
+            while not stop.is_set():
+                s = ops.matrix_cache_stats()
+                assert s["encode_builds"] >= 0 and s["decode_builds"] >= 0
+
+        rt = threading.Thread(target=reader)
+        rt.start()
+        try:
+            def work(t):
+                for i in range(40):
+                    # shared key (2,1) races the same lru_cache miss;
+                    # (2 + t % 3, 2) spreads across a few keys
+                    ops._encode_matrices(2, 1)
+                    ops._encode_matrices(2 + t % 3, 2)
+
+            _hammer(work)
+        finally:
+            stop.set()
+            rt.join()
+        stats = ops.matrix_cache_stats()
+        # lru_cache may run a builder more than once on a concurrent
+        # miss, never less: counted builds >= distinct keys, and every
+        # key is cached exactly once afterwards.
+        assert stats["encode_builds"] >= 4
+        assert stats["encode_cache"]["size"] == 4
+        before = stats["encode_builds"]
+        ops._encode_matrices(2, 1)  # warm hit: no new build
+        assert ops.matrix_cache_stats()["encode_builds"] == before
